@@ -1,0 +1,81 @@
+"""Shared helpers for the paper-reproduction benchmarks."""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core import (build_federation, ddist, fedmd, isgd, precision_recall,
+                        sqmd, train_federation)
+from repro.data import fmnist_like, make_splits, pad_like, sc_like
+from repro.models.mlp import hetero_mlp_zoo
+
+OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "runs/bench")
+
+# CPU-tractable federation scale (paper §IV-B structure, smaller shards so
+# the sparsity/collaboration effects the paper studies are visible).
+# label_noise models IoT sensor/annotation noise (paper §I) — it is what
+# makes isolated overfitting visible at this scale.
+DATASETS = {
+    "sc_like": (sc_like, dict(samples_per_client=60, ref_size=120)),
+    "pad_like": (pad_like, dict(samples_per_client=60, ref_size=120)),
+    "fmnist_like": (fmnist_like, dict(samples_per_client=80, ref_size=160)),
+}
+NOISE = {"sc_like": 0.35, "pad_like": 0.35, "fmnist_like": 0.2}
+
+# Table II optima
+HYPERS = {
+    "sc_like": dict(q=16, k=8, rho=0.8),
+    "pad_like": dict(q=12, k=6, rho=0.8),
+    "fmnist_like": dict(q=16, k=12, rho=0.5),   # rho lowered vs Table II:
+    # at this reduced scale rho=0.8 starves the 120-round bootstrap
+    # (noted in EXPERIMENTS.md §Deviations)
+}
+
+
+def make_dataset(ds_name: str, seed: int = 0, sparsity_r: float = 100.0,
+                 **overrides):
+    ds_fn, ds_kw = DATASETS[ds_name]
+    kw = dict(ds_kw, **overrides)
+    ds = ds_fn(seed=seed * 31 + hash(ds_name) % 7, **kw)
+    splits = make_splits(ds, seed=seed, sparsity_r=sparsity_r,
+                         label_noise=NOISE[ds_name])
+    return ds, splits
+
+N_ROUNDS = int(os.environ.get("REPRO_BENCH_ROUNDS", "80"))
+BATCH = 16
+
+
+def make_protocols(h: Dict, include_ddist: bool = True):
+    ps = [sqmd(q=h["q"], k=h["k"], rho=h["rho"]), fedmd(rho=h["rho"])]
+    if include_ddist:
+        ps.append(ddist(k=h["k"], rho=h["rho"]))
+    ps.append(isgd())
+    return ps
+
+
+def run_protocol(ds, splits, proto, seed=1, n_rounds=None, join_round=None,
+                 eval_every=None):
+    import jax
+    jax.clear_caches()   # long sweeps otherwise exhaust container RAM
+    zoo = hetero_mlp_zoo(ds.feature_len, ds.n_classes)
+    fams = list(zoo)
+    # Table I heterogeneity ratios: ~N/3 clients per family
+    assignment = [fams[i % 3] for i in range(ds.n_clients)]
+    fed = build_federation(ds, splits, zoo, assignment, proto, seed=seed,
+                           join_round=join_round)
+    n_rounds = n_rounds or N_ROUNDS
+    hist = train_federation(fed, splits, n_rounds=n_rounds, batch_size=BATCH,
+                            eval_every=eval_every or 5)
+    return fed, hist
+
+
+def bench_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"
+
+
+def ensure_out():
+    os.makedirs(OUT_DIR, exist_ok=True)
+    return OUT_DIR

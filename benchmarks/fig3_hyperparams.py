@@ -1,0 +1,58 @@
+"""Fig. 3: K and Q sensitivity of SQMD (with FedMD / I-SGD reference
+lines)."""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import DATASETS, HYPERS, ensure_out, make_dataset, run_protocol
+from repro.core import fedmd, isgd, sqmd
+
+K_GRID = (2, 4, 8, 12)
+Q_GRID = (4, 8, 12, 16)
+
+
+def run(verbose=True):
+    out = {}
+    for ds_name in DATASETS:
+        h = HYPERS[ds_name]
+        ds, splits = make_dataset(ds_name, seed=0)
+        row = {"k_sweep": {}, "q_sweep": {}, "ref": {}}
+        for name, proto in [("fedmd", fedmd(rho=h["rho"])),
+                            ("isgd", isgd())]:
+            _, hist = run_protocol(ds, splits, proto, seed=1)
+            row["ref"][name] = hist.selected_acc
+        for k in K_GRID:
+            _, hist = run_protocol(
+                ds, splits, sqmd(q=max(h["q"], k + 1), k=k, rho=h["rho"]),
+                seed=1)
+            row["k_sweep"][str(k)] = hist.selected_acc
+        for q in Q_GRID:
+            _, hist = run_protocol(
+                ds, splits, sqmd(q=q, k=max(1, q // 2), rho=h["rho"]),
+                seed=1)
+            row["q_sweep"][str(q)] = hist.selected_acc
+        if verbose:
+            print(f"  {ds_name}: K {row['k_sweep']}  Q {row['q_sweep']}  "
+                  f"refs {row['ref']}", flush=True)
+        out[ds_name] = row
+    return out
+
+
+def main():
+    t0 = time.time()
+    print("== Fig 3: K/Q sensitivity ==", flush=True)
+    out = run()
+    d = ensure_out()
+    with open(f"{d}/fig3.json", "w") as f:
+        json.dump(out, f, indent=2)
+    best_k = {d_: max(v["k_sweep"], key=v["k_sweep"].get)
+              for d_, v in out.items()}
+    print(f"fig3_hyperparams,{(time.time()-t0)*1e6:.0f},best_k={best_k}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Quickstart: the SQMD protocol in ~60 lines with the public API.
+
+Builds a 12-client heterogeneous federation (3 MLP families) on a synthetic
+apnea-like dataset, trains 20 rounds with SQMD, and prints the accuracy plus
+the learned collaboration graph.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (build_federation, graph_stats, sqmd,
+                        train_federation, CollaborationGraph)
+from repro.data import make_splits, pad_like
+from repro.models.mlp import hetero_mlp_zoo
+
+
+def main():
+    # 1. data: 28 clients with private non-IID shards + a shared reference
+    #    set whose labels only the server holds (paper Def. 1)
+    ds = pad_like(samples_per_client=60, ref_size=120)
+    splits = make_splits(ds, seed=0, label_noise=0.3)
+
+    # 2. heterogeneous client models: three capacity tiers, mirroring the
+    #    paper's ResNet8/20/50 mix — no parameter averaging is possible
+    zoo = hetero_mlp_zoo(ds.feature_len, ds.n_classes)
+    assignment = [list(zoo)[i % 3] for i in range(ds.n_clients)]
+
+    # 3. the protocol: quality top-Q filter, similarity top-K neighbors,
+    #    distill with weight rho (paper Eq. 6)
+    protocol = sqmd(q=12, k=6, rho=0.8)
+
+    fed = build_federation(ds, splits, zoo, assignment, protocol, seed=1)
+    hist = train_federation(fed, splits, n_rounds=25, batch_size=16,
+                            eval_every=5, verbose=True)
+
+    print(f"\nfinal mean test accuracy: {hist.mean_acc[-1]:.4f}")
+
+    # 4. inspect the dynamic collaboration graph the server learned
+    import jax.numpy as jnp
+    g = CollaborationGraph(
+        neighbors=jnp.zeros((1, 1), jnp.int32), weights=fed.server.weights,
+        similarity=fed.server.sim, candidates=fed.server.active)
+    print("collaboration graph:", graph_stats(g))
+
+    # how well did similarity recover the ground-truth clusters?
+    w = np.asarray(fed.server.weights)
+    cl = ds.client_cluster
+    hit = [np.mean(cl[np.where(w[i] > 0)[0]] == cl[i])
+           for i in range(ds.n_clients)]
+    print(f"neighbor/cluster agreement: {np.mean(hit):.2f} "
+          f"(random would be ~{np.mean([np.mean(cl == c) for c in cl]):.2f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Serving example: batched prefill + greedy decode for any assigned
+architecture (reduced config on CPU; the same step functions lower on the
+production mesh via launch/dryrun.py).
+
+    PYTHONPATH=src python examples/serve_decode.py --arch mamba2-780m
+    PYTHONPATH=src python examples/serve_decode.py --arch gemma3-1b
+"""
+import argparse
+
+from repro.configs import ARCH_IDS
+from repro.launch.serve import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="gemma3-1b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--decode", type=int, default=24)
+    args = ap.parse_args()
+    print(f"serving {args.arch} (reduced config, CPU)")
+    out = serve(args.arch, reduced=True, batch=args.batch,
+                prompt_len=args.prompt_len, decode_len=args.decode)
+    print(f"generated token grid: {out['generated']}")
+
+
+if __name__ == "__main__":
+    main()

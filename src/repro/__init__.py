@@ -1,0 +1,3 @@
+"""repro: SQMD (messenger distillation) as a production multi-pod JAX framework."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,5 @@
+from repro.checkpoint.io import (latest_step, restore_pytree, save_pytree,
+                                 restore_federation, save_federation)
+
+__all__ = ["latest_step", "restore_pytree", "save_pytree",
+           "restore_federation", "save_federation"]

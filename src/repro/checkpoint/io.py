@@ -1,0 +1,114 @@
+"""msgpack pytree checkpointing (orbax is not available offline).
+
+Layout: <dir>/step_<n>.msgpack, each file a self-describing tree where
+arrays are {"__nd__": shape, "dtype": str, "data": bytes}. Atomic writes
+(tmp + rename) so a killed run never leaves a torn checkpoint.
+"""
+from __future__ import annotations
+
+import os
+import re
+import tempfile
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _encode(obj: Any):
+    if isinstance(obj, (jnp.ndarray, np.ndarray)):
+        arr = np.asarray(obj)
+        return {"__nd__": list(arr.shape), "dtype": str(arr.dtype),
+                "data": arr.tobytes()}
+    if isinstance(obj, dict):
+        return {"__map__": {k: _encode(v) for k, v in obj.items()}}
+    if isinstance(obj, (list, tuple)):
+        return {"__seq__": [_encode(v) for v in obj],
+                "tuple": isinstance(obj, tuple)}
+    if obj is None or isinstance(obj, (bool, int, float, str)):
+        return {"__leaf__": obj}
+    raise TypeError(f"cannot checkpoint {type(obj)}")
+
+
+def _decode(obj: Any):
+    if "__nd__" in obj:
+        arr = np.frombuffer(obj["data"], dtype=np.dtype(obj["dtype"]))
+        return jnp.asarray(arr.reshape(obj["__nd__"]))
+    if "__map__" in obj:
+        return {k: _decode(v) for k, v in obj["__map__"].items()}
+    if "__seq__" in obj:
+        seq = [_decode(v) for v in obj["__seq__"]]
+        return tuple(seq) if obj.get("tuple") else seq
+    return obj["__leaf__"]
+
+
+def save_pytree(path: str, tree: Any) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    payload = msgpack.packb(_encode(jax.tree.map(lambda x: x, tree)),
+                            use_bin_type=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)))
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(payload)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def restore_pytree(path: str) -> Any:
+    with open(path, "rb") as f:
+        return _decode(msgpack.unpackb(f.read(), raw=False))
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := re.match(r"step_(\d+)\.msgpack$", f))]
+    return max(steps) if steps else None
+
+
+def save_federation(ckpt_dir: str, fed, step: int) -> None:
+    """Persist the full federation: every cohort's stacked params/opt state
+    + the server state (repository, graph, quality)."""
+    tree = {
+        "server": fed.server._asdict(),
+        "cohorts": [{
+            "family": c.family_name,
+            "client_ids": np.asarray(c.client_ids),
+            "params": c.params,
+            "opt_state": _optstate_to_tree(c.opt_state),
+        } for c in fed.cohorts],
+        "round": step,
+    }
+    save_pytree(os.path.join(ckpt_dir, f"step_{step}.msgpack"), tree)
+
+
+def restore_federation(ckpt_dir: str, fed, step: Optional[int] = None):
+    """Restore in place; cohort order/families must match."""
+    from repro.core.server import ServerState
+    step = step if step is not None else latest_step(ckpt_dir)
+    tree = restore_pytree(os.path.join(ckpt_dir, f"step_{step}.msgpack"))
+    fed.server = ServerState(**tree["server"])
+    for c, saved in zip(fed.cohorts, tree["cohorts"]):
+        assert c.family_name == saved["family"], "cohort layout changed"
+        c.params = saved["params"]
+        c.opt_state = _optstate_from_tree(saved["opt_state"], c.opt_state)
+    return step
+
+
+def _optstate_to_tree(s):
+    if hasattr(s, "_asdict"):
+        return {"__nt__": type(s).__name__, **s._asdict()}
+    return s
+
+
+def _optstate_from_tree(tree, template):
+    if isinstance(tree, dict) and "__nt__" in tree:
+        vals = {k: v for k, v in tree.items() if k != "__nt__"}
+        return type(template)(**vals)
+    return tree

@@ -1,0 +1,25 @@
+"""deepseek-67b [dense] — 95L d_model=8192 64H (GQA kv=8) d_ff=22016
+vocab=102400, llama architecture. [arXiv:2401.02954]
+"""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-67b",
+    family="dense",
+    n_layers=95,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=22016,
+    vocab_size=102400,
+    rope_theta=10_000.0,
+    layer_pattern=("global",),
+    source="arXiv:2401.02954 (DeepSeek LLM 67B)",
+)
+
+
+def reduced() -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(
+        CONFIG, name="deepseek67-smoke", n_layers=2, d_model=256, n_heads=8,
+        n_kv_heads=2, head_dim=32, d_ff=512, vocab_size=512)

@@ -1,0 +1,139 @@
+"""Architecture registry + the four assigned input shapes + input_specs().
+
+``input_specs(cfg, shape)`` returns weak-type-correct ``jax.ShapeDtypeStruct``
+stand-ins for every model input of that (arch, shape) — zero allocation; this
+is what the multi-pod dry-run lowers against.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import importlib
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.cache import init_cache
+from repro.models.common import ModelConfig
+from repro.models.frontends import VLM_IMAGE_TOKENS
+
+AUDIO_COND_FRAMES = 64   # musicgen conditioning prefix length
+
+_MODULES = {
+    "internvl2-76b": "repro.configs.internvl2_76b",
+    "mixtral-8x7b": "repro.configs.mixtral_8x7b",
+    "deepseek-67b": "repro.configs.deepseek_67b",
+    "gemma3-1b": "repro.configs.gemma3_1b",
+    "musicgen-medium": "repro.configs.musicgen_medium",
+    "deepseek-v2-236b": "repro.configs.deepseek_v2_236b",
+    "qwen2-0.5b": "repro.configs.qwen2_0_5b",
+    "stablelm-3b": "repro.configs.stablelm_3b",
+    "mamba2-780m": "repro.configs.mamba2_780m",
+    "recurrentgemma-9b": "repro.configs.recurrentgemma_9b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                  # train | prefill | decode
+
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+# archs whose live decode state is sub-quadratic in S (DESIGN.md skip matrix)
+LONG_CONTEXT_OK = frozenset(
+    {"mamba2-780m", "recurrentgemma-9b", "gemma3-1b", "mixtral-8x7b"})
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(_MODULES[arch_id])
+    return mod.CONFIG
+
+
+def get_reduced(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(_MODULES[arch_id])
+    return mod.reduced()
+
+
+def supports_shape(cfg: ModelConfig, shape: InputShape) -> bool:
+    if shape.name == "long_500k":
+        return cfg.name in LONG_CONTEXT_OK
+    return True
+
+
+def skip_reason(cfg: ModelConfig, shape: InputShape) -> Optional[str]:
+    if supports_shape(cfg, shape):
+        return None
+    return ("pure full-attention decoder: 500k decode requires sub-quadratic "
+            "live state (DESIGN.md long_500k skip matrix)")
+
+
+def _frontend_prefix(cfg: ModelConfig) -> int:
+    if cfg.frontend == "vision":
+        return VLM_IMAGE_TOKENS
+    if cfg.frontend == "audio":
+        return AUDIO_COND_FRAMES
+    return 0
+
+
+def _frontend_width(cfg: ModelConfig) -> int:
+    from repro.models.frontends import frontend_dim
+    return frontend_dim(cfg.frontend)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape,
+                batch_override: Optional[int] = None) -> Dict[str, Any]:
+    """ShapeDtypeStruct inputs for (arch, shape). Keys match the step fns:
+
+      train  -> {tokens, labels[, embeds]}
+      prefill-> {tokens[, embeds]}
+      decode -> {token, cache}
+    """
+    b = batch_override or shape.global_batch
+    s = shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "decode":
+        cache = jax.eval_shape(
+            functools.partial(init_cache, cfg, b, s))
+        return {"token": jax.ShapeDtypeStruct((b, 1), i32), "cache": cache}
+
+    prefix = min(_frontend_prefix(cfg), s // 2)   # clamp for smoke shapes
+    specs: Dict[str, Any] = {}
+    text = s - prefix
+    specs["tokens"] = jax.ShapeDtypeStruct((b, text), i32)
+    if prefix:
+        specs["embeds"] = jax.ShapeDtypeStruct(
+            (b, prefix, _frontend_width(cfg)), cfg.param_dtype)
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((b, text), i32)
+    return specs
+
+
+def concrete_inputs(key, cfg: ModelConfig, shape: InputShape,
+                    batch_override: Optional[int] = None) -> Dict[str, Any]:
+    """Small concrete inputs matching input_specs (for smoke tests)."""
+    specs = input_specs(cfg, shape, batch_override)
+    out = {}
+    for name, spec in specs.items():
+        if name == "cache":
+            out[name] = init_cache(
+                cfg, batch_override or shape.global_batch, shape.seq_len)
+            continue
+        key, sub = jax.random.split(key)
+        if jnp.issubdtype(spec.dtype, jnp.integer):
+            out[name] = jax.random.randint(sub, spec.shape, 0,
+                                           cfg.vocab_size, spec.dtype)
+        else:
+            out[name] = jax.random.normal(sub, spec.shape, spec.dtype)
+    return out

@@ -1,0 +1,107 @@
+"""Client-side state and the vmapped cohort step (Algorithm 1 line 12).
+
+Clients of the same architecture family form a *cohort*: their params are a
+stacked pytree advanced with one vmapped jit'd step. Heterogeneity across
+cohorts is total (different architectures, layer counts, widths) — only
+messengers ever cross cohort boundaries, exactly the paper's constraint.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distill import local_loss, ref_loss
+from repro.core.messenger import cohort_messengers
+from repro.optim import Optimizer
+
+Params = Any
+
+
+@dataclasses.dataclass
+class Cohort:
+    """All clients sharing one model family."""
+    family_name: str
+    apply_fn: Callable[[Params, jnp.ndarray], jnp.ndarray]
+    params: Params                       # stacked (n_c, ...)
+    opt_state: Any                       # stacked
+    client_ids: np.ndarray               # (n_c,) global client indices
+    data: Dict[str, jnp.ndarray]         # {x (n_c,M,L), y (n_c,M)}
+
+    @property
+    def n_clients(self) -> int:
+        return len(self.client_ids)
+
+
+def make_cohort(family_name: str, init_fn, apply_fn, optimizer: Optimizer,
+                client_ids, data, key) -> Cohort:
+    keys = jax.random.split(key, len(client_ids))
+    params = jax.vmap(init_fn)(keys)
+    opt_state = jax.vmap(optimizer.init)(params)
+    return Cohort(family_name, apply_fn, params, opt_state,
+                  np.asarray(client_ids), data)
+
+
+def _client_loss(apply_fn, params, x, y, ref_x, targets, rho: float,
+                 use_ref: bool):
+    loc = local_loss(apply_fn, params, x, y)
+    if not use_ref:
+        return loc
+    ref = ref_loss(apply_fn, params, ref_x, targets)
+    return (1.0 - rho) * loc + rho * ref
+
+
+@functools.partial(jax.jit, static_argnames=("apply_fn", "optimizer", "rho",
+                                             "use_ref"))
+def cohort_step(apply_fn, optimizer: Optimizer, params, opt_state,
+                batch_x, batch_y, ref_x, targets, trainable,
+                rho: float, use_ref: bool):
+    """One vmapped SGD step for a whole cohort.
+
+    batch_x (n_c,B,L), batch_y (n_c,B), targets (n_c,R,C) per-client
+    distill targets, trainable (n_c,) bool (inactive clients frozen).
+    Returns (params, opt_state, per-client loss)."""
+
+    def one(p, s, x, y, t, on):
+        loss, grads = jax.value_and_grad(
+            lambda q: _client_loss(apply_fn, q, x, y, ref_x, t, rho,
+                                   use_ref))(p)
+        updates, new_s = optimizer.update(grads, s, p)
+        gate = on.astype(jnp.float32)
+        new_p = jax.tree.map(
+            lambda a, u: (a + gate * u.astype(a.dtype)).astype(a.dtype),
+            p, updates)
+        # freeze optimizer state too when inactive
+        new_s = jax.tree.map(
+            lambda a, b: jnp.where(on, b, a) if a.shape == b.shape else b,
+            s, new_s)
+        return new_p, new_s, loss
+
+    return jax.vmap(one)(params, opt_state, batch_x, batch_y, targets,
+                         trainable)
+
+
+@functools.partial(jax.jit, static_argnames=("apply_fn",))
+def cohort_messenger_upload(apply_fn, params, ref_x) -> jnp.ndarray:
+    """(n_c, R, C) log-prob messengers for the cohort."""
+    return cohort_messengers(apply_fn, params, ref_x)
+
+
+@functools.partial(jax.jit, static_argnames=("apply_fn",))
+def cohort_accuracy(apply_fn, params, xs, ys):
+    """Per-client accuracy on stacked eval shards (n_c, M, L)/(n_c, M)."""
+
+    def one(p, x, y):
+        logits = apply_fn(p, x)
+        return jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+
+    return jax.vmap(one)(params, xs, ys)
+
+
+@functools.partial(jax.jit, static_argnames=("apply_fn",))
+def cohort_pred(apply_fn, params, xs):
+    return jax.vmap(lambda p, x: jnp.argmax(apply_fn(p, x), -1))(params, xs)

@@ -1,0 +1,55 @@
+"""The SQMD objective (paper Eq. 3/5/6).
+
+L*  = (1-ρ)·L_loc + ρ·L_ref
+L_loc = mean CE on the private shard                      (Eq. 3)
+L_ref = (1/R) Σ_j ‖ φ(θ, x̄_j) − target_j ‖²              (Eq. 5)
+
+where target_j is the K-neighbor messenger mean on reference sample j
+(probability space). The 1/R normalization matches Algorithm 1 line 12's
+2ρη/R gradient scale.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Params
+
+
+def local_loss(apply_fn: Callable, params: Params, x: jnp.ndarray,
+               y: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 3 — mean cross-entropy on the private batch. y int labels."""
+    logits = apply_fn(params, x).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, y[:, None], axis=-1)[:, 0]
+    return -jnp.mean(ll)
+
+
+def ref_loss(apply_fn: Callable, params: Params, ref_x: jnp.ndarray,
+             targets: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 5 — mean-over-R squared L2 between own soft decision and the
+    neighbor-mean target (both probability distributions)."""
+    logits = apply_fn(params, ref_x).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    sq = jnp.sum((probs - targets) ** 2, axis=-1)            # (R,)
+    return jnp.mean(sq)
+
+
+def sqmd_loss(apply_fn: Callable, params: Params, batch: Dict,
+              rho: float) -> jnp.ndarray:
+    """Eq. 6 for one client. batch: {x, y, ref_x, targets}; rho ∈ [0,1].
+
+    rho == 0.0 degenerates to I-SGD (pure local training)."""
+    loc = local_loss(apply_fn, params, batch["x"], batch["y"])
+    if rho == 0.0:
+        return loc
+    ref = ref_loss(apply_fn, params, batch["ref_x"], batch["targets"])
+    return (1.0 - rho) * loc + rho * ref
+
+
+def sqmd_grads(apply_fn: Callable, params: Params, batch: Dict, rho: float):
+    """(loss, grads) — the client-side backprop of Algorithm 1 line 12."""
+    return jax.value_and_grad(
+        lambda p: sqmd_loss(apply_fn, p, batch, rho))(params)

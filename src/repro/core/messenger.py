@@ -1,0 +1,34 @@
+"""Messengers (paper Def. 2): soft decisions on the shared reference set.
+
+A messenger is stored as LOG-probabilities ``(R, C)`` — log-space is safer
+for the downstream KL math and halves the wire cost in bf16 (DESIGN.md §3).
+The repository stacks them into ``S (N, R, C)``.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Params
+
+
+def make_messenger(apply_fn: Callable, params: Params,
+                   ref_x: jnp.ndarray) -> jnp.ndarray:
+    """φ(θ, D_r): client model logits on the reference set -> log-probs (R,C)."""
+    logits = apply_fn(params, ref_x)
+    return jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+
+
+def cohort_messengers(apply_fn: Callable, stacked_params: Params,
+                      ref_x: jnp.ndarray) -> jnp.ndarray:
+    """vmap over a cohort's stacked client params -> (n_cohort, R, C)."""
+    return jax.vmap(lambda p: make_messenger(apply_fn, p, ref_x))(
+        stacked_params)
+
+
+def messenger_bytes(logp: jnp.ndarray, wire_dtype=jnp.bfloat16) -> int:
+    """Per-round uplink cost of one messenger (the paper's bandwidth claim)."""
+    r, c = logp.shape[-2:]
+    return r * c * jnp.dtype(wire_dtype).itemsize

@@ -1,0 +1,48 @@
+"""Collaboration protocols: SQMD (the paper) + its three baselines (§IV-A).
+
+  SQMD   — quality top-Q filter, then similarity top-K neighbors (dynamic
+           directed graph), distill toward the K-neighbor messenger mean.
+  FedMD  — Li & Wang 2019: everyone distills toward the global average
+           messenger (the Q = K = N degenerate case of SQMD).
+  D-Dist — Bistritz et al. 2020: static random K-neighbor groups, no server
+           filtering.
+  I-SGD  — isolated local SGD, no collaboration (rho = 0).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Protocol:
+    name: str                    # sqmd | fedmd | ddist | isgd
+    rho: float = 0.8             # Eq. 6 trade-off
+    q: int = 16                  # quality pool size (sqmd)
+    k: int = 8                   # neighbors (sqmd / ddist)
+    interval: int = 1            # communication interval I (Alg. 1)
+
+    def __post_init__(self):
+        assert self.name in ("sqmd", "fedmd", "ddist", "isgd"), self.name
+        assert 0.0 <= self.rho <= 1.0
+
+    @property
+    def uses_reference(self) -> bool:
+        return self.name != "isgd"
+
+
+def sqmd(q: int = 16, k: int = 8, rho: float = 0.8,
+         interval: int = 1) -> Protocol:
+    return Protocol("sqmd", rho=rho, q=q, k=k, interval=interval)
+
+
+def fedmd(rho: float = 0.8, interval: int = 1) -> Protocol:
+    return Protocol("fedmd", rho=rho, interval=interval)
+
+
+def ddist(k: int = 8, rho: float = 0.8, interval: int = 1) -> Protocol:
+    return Protocol("ddist", rho=rho, k=k, interval=interval)
+
+
+def isgd() -> Protocol:
+    return Protocol("isgd", rho=0.0)

@@ -1,0 +1,100 @@
+"""The SQMD central server (Algorithm 1 lines 5–10).
+
+State (a pytree — jit-able end to end):
+  repo_logp (N,R,C)  messenger repository S (stale rows allowed: asynchrony)
+  active    (N,)     participation mask (clients that have ever joined)
+  quality   (N,)     latest Eq.1 grades
+  sim       (N,N)    latest similarity matrix C (Def. 5)
+  weights   (N,N)    current collaboration-graph selection matrix W
+  round     ()       round counter
+
+``server_round`` consumes freshly uploaded messengers, updates the
+repository, re-grades, rebuilds the dynamic graph per the protocol, and
+returns the per-client distillation targets (the K^n payloads).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import graph as graph_mod
+from repro.core import quality as quality_mod
+from repro.core import similarity as sim_mod
+from repro.core.protocols import Protocol
+from repro.kernels import ops
+
+
+class ServerState(NamedTuple):
+    repo_logp: jnp.ndarray
+    active: jnp.ndarray
+    quality: jnp.ndarray
+    sim: jnp.ndarray
+    weights: jnp.ndarray
+    round: jnp.ndarray
+
+
+def init_server(n_clients: int, ref_size: int, n_classes: int) -> ServerState:
+    """Repository starts uniform (max-entropy messengers => worst quality,
+    so un-joined clients are naturally excluded from Q)."""
+    uniform = jnp.full((n_clients, ref_size, n_classes),
+                       -jnp.log(n_classes), jnp.float32)
+    return ServerState(
+        repo_logp=uniform,
+        active=jnp.zeros((n_clients,), bool),
+        quality=jnp.full((n_clients,), quality_mod.BIG),
+        sim=jnp.zeros((n_clients, n_clients), jnp.float32),
+        weights=jnp.zeros((n_clients, n_clients), jnp.float32),
+        round=jnp.zeros((), jnp.int32),
+    )
+
+
+def upload_messengers(state: ServerState, messengers_logp: jnp.ndarray,
+                      uploaded: jnp.ndarray) -> ServerState:
+    """Merge fresh messengers into the repository (rows where uploaded).
+
+    Clients that skipped this round keep their STALE repository row — the
+    paper's asynchronous semantics."""
+    mask = uploaded[:, None, None]
+    repo = jnp.where(mask, messengers_logp.astype(jnp.float32),
+                     state.repo_logp)
+    return state._replace(repo_logp=repo, active=state.active | uploaded)
+
+
+def server_round(state: ServerState, protocol: Protocol,
+                 ref_labels: jnp.ndarray,
+                 static_weights: Optional[jnp.ndarray] = None,
+                 backend: Optional[str] = None
+                 ) -> Tuple[ServerState, jnp.ndarray]:
+    """Lines 7–10: grade, filter top-Q, similarity top-K, emit targets.
+
+    Returns (new_state, targets (N,R,C) fp32 probability targets).
+    For "ddist" pass the static graph's ``static_weights``."""
+    repo = state.repo_logp
+    g = quality_mod.quality_scores(repo, ref_labels, backend=backend)
+
+    if protocol.name == "sqmd":
+        cand = quality_mod.candidate_mask(g, state.active, protocol.q)
+        div = sim_mod.divergence_matrix(repo, backend=backend)
+        sim = sim_mod.similarity_matrix(div)
+        cg = graph_mod.select_neighbors(sim, cand, protocol.k)
+        weights = cg.weights
+    elif protocol.name == "fedmd":
+        cg = graph_mod.fedmd_graph(state.active)
+        weights, sim = cg.weights, state.sim
+    elif protocol.name == "ddist":
+        assert static_weights is not None, "ddist needs its static graph"
+        # mask columns of clients that never joined
+        weights = static_weights * state.active[None, :].astype(jnp.float32)
+        weights = weights / jnp.maximum(weights.sum(1, keepdims=True), 1e-9)
+        sim = state.sim
+    else:  # isgd: no targets
+        weights = jnp.zeros_like(state.weights)
+        sim = state.sim
+
+    probs = jnp.exp(repo)
+    targets = ops.neighbor_mean(weights, probs, backend=backend)
+    new = state._replace(quality=g, sim=sim, weights=weights,
+                         round=state.round + 1)
+    return new, targets

@@ -1,0 +1,29 @@
+"""Inter-model similarity (paper Def. 4, Eq. 2).
+
+d_nm = (1/R) Σ_j KL(s^n_j || s^m_j) — asymmetric; similarity c_nm = 1/d_nm.
+The (N,N) divergence matrix is the server's O(N²RC) hot spot → Pallas
+kernel (kernels/pairwise_kl.py).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+EPS = 1e-8
+
+
+def divergence_matrix(messengers_logp: jnp.ndarray,
+                      backend: Optional[str] = None) -> jnp.ndarray:
+    """(N,R,C) log-messengers -> (N,N) fp32, D[n,m] = mean_j KL(n || m)."""
+    return ops.pairwise_kl(messengers_logp, backend=backend)
+
+
+def similarity_matrix(divergence: jnp.ndarray) -> jnp.ndarray:
+    """c_nm = 1 / d_nm (paper Def. 4). Diagonal forced to 0 so a client is
+    never its own neighbor; numerical floor keeps identical twins finite."""
+    c = 1.0 / jnp.maximum(divergence, EPS)
+    n = c.shape[0]
+    return c * (1.0 - jnp.eye(n, dtype=c.dtype))

@@ -1,0 +1,13 @@
+from repro.data.partition import (ClientSplit, apply_sparsity, make_splits,
+                                  pack_cohort, sliding_window_augment,
+                                  split_client)
+from repro.data.pipeline import cohort_batch, lm_batches
+from repro.data.synthetic import (DATASETS, FederatedDataset, fmnist_like,
+                                  lm_token_stream, pad_like, sc_like)
+
+__all__ = [
+    "ClientSplit", "apply_sparsity", "make_splits", "pack_cohort",
+    "sliding_window_augment", "split_client", "cohort_batch", "lm_batches",
+    "DATASETS", "FederatedDataset", "fmnist_like", "lm_token_stream",
+    "pad_like", "sc_like",
+]

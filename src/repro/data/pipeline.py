@@ -1,0 +1,35 @@
+"""Batching pipelines: per-client minibatch sampling (federation) and
+token-stream batching (arch-zoo LM training)."""
+from __future__ import annotations
+
+from typing import Dict, Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def cohort_batch(key, data: Dict[str, jnp.ndarray],
+                 batch_size: int) -> Dict[str, jnp.ndarray]:
+    """Sample a per-client minibatch from stacked shards.
+
+    data: {x (n_c, M, L), y (n_c, M)} -> {x (n_c, B, L), y (n_c, B)}.
+    Each client draws independently (its own row of indices)."""
+    n_c, m = data["y"].shape
+    idx = jax.random.randint(key, (n_c, batch_size), 0, m)
+    x = jnp.take_along_axis(data["x"], idx[..., None], axis=1)
+    y = jnp.take_along_axis(data["y"], idx, axis=1)
+    return {"x": x, "y": y}
+
+
+def lm_batches(tokens: jnp.ndarray, batch: int, seq: int,
+               seed: int = 0) -> Iterator[Dict[str, jnp.ndarray]]:
+    """Iterate {tokens, labels} next-token batches from a flat stream."""
+    n = tokens.shape[0]
+    per = batch * (seq + 1)
+    rng = np.random.default_rng(seed)
+    while True:
+        starts = rng.integers(0, n - seq - 1, size=batch)
+        rows = np.stack([np.asarray(tokens[s:s + seq + 1]) for s in starts])
+        rows = jnp.asarray(rows)
+        yield {"tokens": rows[:, :-1], "labels": rows[:, 1:]}

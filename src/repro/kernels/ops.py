@@ -1,0 +1,67 @@
+"""Public jit'd wrappers for the server kernels.
+
+``backend`` selects:
+  * "pallas"     — pl.pallas_call compiled for TPU (interpret=False),
+  * "interpret"  — same kernel body, Python interpreter (CPU validation),
+  * "jnp"        — the pure-jnp oracle from ref.py.
+
+On this CPU container the default is "interpret" for small inputs in tests
+and "jnp" for the federation runtime (fastest on CPU); on a real TPU the
+default flips to "pallas". The numerical contract is identical.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import neighbor_mean as _nm
+from repro.kernels import pairwise_kl as _pk
+from repro.kernels import ref as _ref
+from repro.kernels import soft_ce as _sc
+
+_DEFAULT_BACKEND: Optional[str] = None
+
+
+def default_backend() -> str:
+    global _DEFAULT_BACKEND
+    if _DEFAULT_BACKEND is None:
+        platform = jax.devices()[0].platform
+        _DEFAULT_BACKEND = "pallas" if platform == "tpu" else "jnp"
+    return _DEFAULT_BACKEND
+
+
+def set_default_backend(name: str) -> None:
+    global _DEFAULT_BACKEND
+    assert name in ("pallas", "interpret", "jnp")
+    _DEFAULT_BACKEND = name
+
+
+def pairwise_kl(logp: jnp.ndarray, backend: Optional[str] = None,
+                **blocks) -> jnp.ndarray:
+    """Eq.2 divergence matrix. logp (N,R,C) -> (N,N) fp32."""
+    backend = backend or default_backend()
+    if backend == "jnp":
+        return _ref.pairwise_kl_ref(logp)
+    return _pk.pairwise_kl(logp, interpret=(backend == "interpret"), **blocks)
+
+
+def soft_ce(logits: jnp.ndarray, labels: jnp.ndarray,
+            backend: Optional[str] = None, **blocks) -> jnp.ndarray:
+    """Eq.1 quality scores. logits (N,R,C), labels (R,) -> (N,) fp32."""
+    backend = backend or default_backend()
+    if backend == "jnp":
+        return _ref.soft_ce_ref(logits, labels)
+    return _sc.soft_ce(logits, labels, interpret=(backend == "interpret"),
+                       **blocks)
+
+
+def neighbor_mean(w: jnp.ndarray, probs: jnp.ndarray,
+                  backend: Optional[str] = None, **blocks) -> jnp.ndarray:
+    """Eq.5 targets. w (N,N), probs (N,R,C) -> (N,R,C) fp32."""
+    backend = backend or default_backend()
+    if backend == "jnp":
+        return _ref.neighbor_mean_ref(w, probs)
+    return _nm.neighbor_mean(w, probs, interpret=(backend == "interpret"),
+                             **blocks)

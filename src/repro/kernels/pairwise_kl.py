@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: pairwise messenger KL-divergence matrix (paper Eq. 2).
+
+The O(N²·R·C) server hot spot, decomposed for the MXU (DESIGN.md §4):
+
+    D[n,m] = (rowterm(n) − P_flat[n] · L_flat[m]) / R
+
+i.e. a blocked matmul over the flattened (R·C) axis with a fused
+negative-entropy row term. Grid is (N/BN, N/BM, RC/BK): the k axis is
+innermost so each (i, j) output tile accumulates in VMEM in fp32; the row
+term is fused into the same k loop (it reads the (i, k) tile of L that is
+already resident). Block shapes default to MXU-aligned 128×128×512.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BN = 128
+DEFAULT_BM = 128
+DEFAULT_BK = 512
+
+
+def _kernel(p_ref, ln_ref, lm_ref, out_ref, *, n_k: int, inv_r: float):
+    """p_ref (BN,BK) probs tile [i,k]; ln_ref (BN,BK) logp tile [i,k];
+    lm_ref (BM,BK) logp tile [j,k]; out_ref (BN,BM) fp32 accumulator."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    p = p_ref[...].astype(jnp.float32)
+    ln = ln_ref[...].astype(jnp.float32)
+    lm = lm_ref[...].astype(jnp.float32)
+    # fused row entropy term: sum_k p * ln  (broadcast over the m tile)
+    rowterm = jnp.sum(p * ln, axis=1, keepdims=True)        # (BN, 1)
+    cross = jax.lax.dot_general(
+        p, lm, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                 # (BN, BM)
+    out_ref[...] += rowterm - cross
+
+    @pl.when(k == n_k - 1)
+    def _scale():
+        out_ref[...] *= inv_r
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bn", "bm", "bk", "interpret"))
+def pairwise_kl(logp: jnp.ndarray, bn: int = DEFAULT_BN, bm: int = DEFAULT_BM,
+                bk: int = DEFAULT_BK, interpret: bool = True) -> jnp.ndarray:
+    """logp (N,R,C) log-messengers -> (N,N) fp32 divergence matrix."""
+    n, r, c = logp.shape
+    lp = logp.reshape(n, r * c)
+    p = jnp.exp(lp.astype(jnp.float32)).astype(logp.dtype)
+    rc = r * c
+    bn = min(bn, _ceil_mult(n))
+    bm = min(bm, _ceil_mult(n))
+    bk = min(bk, _ceil_mult(rc))
+    n_pad = -n % bn
+    m_pad = -n % bm
+    k_pad = -rc % bk
+    # zero-pad: padded k columns contribute 0 to both terms (p=0);
+    # padded rows/cols are sliced off below.
+    p_p = jnp.pad(p, ((0, max(n_pad, m_pad)), (0, k_pad)))
+    l_p = jnp.pad(lp, ((0, max(n_pad, m_pad)), (0, k_pad)))
+    gn, gm, gk = (n + n_pad) // bn, (n + m_pad) // bm, (rc + k_pad) // bk
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_k=gk, inv_r=1.0 / r),
+        grid=(gn, gm, gk),
+        in_specs=[
+            pl.BlockSpec((bn, bk), lambda i, j, k: (i, k)),  # P   [i,k]
+            pl.BlockSpec((bn, bk), lambda i, j, k: (i, k)),  # L_n [i,k]
+            pl.BlockSpec((bm, bk), lambda i, j, k: (j, k)),  # L_m [j,k]
+        ],
+        out_specs=pl.BlockSpec((bn, bm), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n + n_pad, n + m_pad), jnp.float32),
+        interpret=interpret,
+    )(p_p, l_p, l_p)
+    return out[:n, :n]
+
+
+def _ceil_mult(x: int, base: int = 8) -> int:
+    """Smallest multiple of ``base`` >= x (keeps tiny test shapes legal)."""
+    return -(-x // base) * base

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Conventions: messengers are LOG-probabilities ``logp (N, R, C)`` (numerically
+safer on the wire than probabilities — see DESIGN.md §3). All reductions in
+fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_kl_ref(logp: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 2: D[n,m] = (1/R) sum_{j} KL(s^n_j || s^m_j), logp (N,R,C) -> (N,N).
+
+    KL(p_n || p_m) = sum_c p_n (logp_n - logp_m)
+                   = rowterm(n) - <p_n, logp_m>  with rowterm = sum p_n logp_n
+    """
+    n, r, c = logp.shape
+    lp = logp.astype(jnp.float32)
+    p = jnp.exp(lp)
+    pf = p.reshape(n, r * c)
+    lf = lp.reshape(n, r * c)
+    rowterm = jnp.sum(pf * lf, axis=-1)                     # (N,)
+    cross = pf @ lf.T                                       # (N,N)
+    return (rowterm[:, None] - cross) / r
+
+
+def soft_ce_ref(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 1 quality: g[n] = sum_i H(softmax(logits[n,i]), y_i).
+
+    logits (N,R,C) raw client outputs on the reference set; labels (R,) int32.
+    """
+    z = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(z, axis=-1)                      # (N,R)
+    picked = jnp.take_along_axis(z, labels[None, :, None], axis=-1)[..., 0]
+    return jnp.sum(lse - picked, axis=-1)                   # (N,)
+
+
+def neighbor_mean_ref(w: jnp.ndarray, probs: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 5 targets: T[n] = sum_m w[n,m] * probs[m]; w rows sum to 1.
+
+    w (N,N) fp32 selection weights (1/K on the K chosen neighbors);
+    probs (N,R,C) messenger probabilities -> targets (N,R,C) fp32.
+    """
+    n, r, c = probs.shape
+    pf = probs.astype(jnp.float32).reshape(n, r * c)
+    t = w.astype(jnp.float32) @ pf
+    return t.reshape(n, r, c)

@@ -1,0 +1,208 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes and emit the roofline terms.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b \
+      --shape train_4k [--multi-pod] [--out runs/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Each combo writes <out>/<arch>__<shape>__<mesh>.json with:
+  memory_analysis (bytes/device), cost_analysis (FLOPs/bytes),
+  collective bytes by kind, the three roofline terms, MODEL_FLOPS and the
+  useful-compute fraction. Failures (sharding mismatch, OOM at compile,
+  unsupported collective) are bugs in the framework, not in the dry-run.
+"""
+import argparse
+import functools
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as shard
+from repro.configs import (ARCH_IDS, INPUT_SHAPES, get_config, input_specs,
+                           skip_reason)
+from repro.launch.hlo_analysis import (analyze_compiled, model_flops_estimate)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (make_prefill_step, make_serve_step,
+                                make_train_step)
+from repro.models.transformer import abstract_params
+from repro.optim import adam
+
+
+def _abstract_opt(optimizer, params):
+    return jax.eval_shape(optimizer.init, params)
+
+
+def lower_combo(arch: str, shape_name: str, multi_pod: bool,
+                moe_path: str = "gshard", remat: bool = True,
+                donate: bool = True, policy=None, microbatches: int = 1):
+    """Returns (lowered, compiled, roofline_row_dict)."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    reason = skip_reason(cfg, shape)
+    if reason:
+        return None, None, {"arch": arch, "shape": shape_name,
+                            "mesh": "multi" if multi_pod else "single",
+                            "status": "SKIP", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    params = abstract_params(cfg)
+    policy = policy or shard.BASELINE
+    pspecs = shard.param_specs(params, cfg, mesh, policy)
+    specs = input_specs(cfg, shape)
+
+    named = lambda tree: shard.to_named(tree, mesh)
+    from repro.models import transformer as _tf
+    if policy.fsdp:
+        _tf.set_layer_param_hook(shard.make_fsdp_gather_hook(cfg, mesh))
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            optimizer = adam(1e-4)
+            opt = _abstract_opt(optimizer, params)
+            ospecs = shard.opt_specs(opt, pspecs, mesh, policy)
+            bspecs = shard.batch_specs(specs, mesh, policy)
+            step = make_train_step(cfg, optimizer, moe_path=moe_path,
+                                   remat=remat, microbatches=microbatches)
+            jitted = jax.jit(
+                step,
+                in_shardings=(named(pspecs), named(ospecs), named(bspecs)),
+                out_shardings=(named(pspecs), named(ospecs), None),
+                donate_argnums=(0, 1) if donate else ())
+            lowered = jitted.lower(params, opt, specs)
+        elif shape.kind == "prefill":
+            bspecs = shard.batch_specs(specs, mesh)
+            step = make_prefill_step(cfg, moe_path=moe_path,
+                                     cache_seq=shape.seq_len)
+            abstract_cache = jax.eval_shape(
+                lambda p, b: step(p, b)[1], params, specs)
+            cspecs = shard.cache_specs(abstract_cache, cfg, mesh)
+            jitted = jax.jit(step, in_shardings=(named(pspecs), named(bspecs)),
+                             out_shardings=(None, named(cspecs)))
+            lowered = jitted.lower(params, specs)
+        else:  # decode
+            cache = specs["cache"]
+            cspecs = shard.cache_specs(cache, cfg, mesh)
+            tok_spec = shard.batch_specs(
+                {"token": specs["token"]}, mesh)["token"]
+            step = make_serve_step(cfg)
+            jitted = jax.jit(
+                step,
+                in_shardings=(named(pspecs), named(tok_spec), named(cspecs)),
+                out_shardings=(None, named(cspecs)),
+                donate_argnums=(2,) if donate else ())
+            lowered = jitted.lower(params, specs["token"], cache)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    _tf.set_layer_param_hook(None)
+
+    mf = model_flops_estimate(cfg, shape, shape.kind)
+    rl = analyze_compiled(compiled, arch=arch, shape=shape_name,
+                          mesh_name=mesh_name, chips=chips, model_flops=mf)
+    row = rl.row()
+    mem = compiled.memory_analysis()
+    row.update({
+        "status": "OK",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "generated_code_bytes":
+                int(getattr(mem, "generated_code_size_in_bytes", 0)),
+        },
+    })
+    return lowered, compiled, row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--moe-path", default="gshard",
+                    choices=("gshard", "dropless"))
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--dp-over-model", action="store_true")
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--out", default="runs/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    combos = []
+    archs = ARCH_IDS if (args.all or not args.arch) else (args.arch,)
+    shapes = tuple(INPUT_SHAPES) if (args.all or not args.shape) \
+        else (args.shape,)
+    meshes = (False, True) if args.both_meshes else (args.multi_pod,)
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                combos.append((a, s, mp))
+
+    n_ok = n_skip = n_fail = 0
+    for arch, shape_name, mp in combos:
+        tag = f"{arch}__{shape_name}__{'multi' if mp else 'single'}"
+        path = os.path.join(args.out, tag + ".json")
+        print(f"=== {tag} ===", flush=True)
+        try:
+            from repro.sharding import ShardingPolicy
+            _, compiled, row = lower_combo(
+                arch, shape_name, mp, moe_path=args.moe_path,
+                remat=not args.no_remat,
+                policy=ShardingPolicy(dp_over_model=args.dp_over_model,
+                                      fsdp=args.fsdp),
+                microbatches=args.microbatches)
+            if row["status"] == "OK":
+                mem = compiled.memory_analysis()
+                print(f"  memory_analysis: args={mem.argument_size_in_bytes/1e9:.2f}GB "
+                      f"temp={mem.temp_size_in_bytes/1e9:.2f}GB "
+                      f"out={mem.output_size_in_bytes/1e9:.2f}GB per device",
+                      flush=True)
+                ca = compiled.cost_analysis()
+                if isinstance(ca, list):
+                    ca = ca[0]
+                print(f"  cost_analysis(raw): flops={ca.get('flops',0):.3e} "
+                      f"bytes={ca.get('bytes accessed',0):.3e}")
+                print(f"  hlo-corrected: flops={row['hlo_flops_per_dev']:.3e} "
+                      f"bytes={row['hlo_bytes_per_dev']:.3e} "
+                      f"coll={row['coll_bytes_per_dev']:.3e} per device")
+                print(f"  roofline: compute={row['compute_s']*1e3:.2f}ms "
+                      f"memory={row['memory_s']*1e3:.2f}ms "
+                      f"collective={row['collective_s']*1e3:.2f}ms "
+                      f"-> {row['dominant']}-bound "
+                      f"(useful={row['useful_flops_frac']:.2f})", flush=True)
+                n_ok += 1
+            else:
+                print(f"  SKIP: {row['reason']}")
+                n_skip += 1
+        except Exception as e:
+            row = {"arch": arch, "shape": shape_name,
+                   "mesh": "multi" if mp else "single", "status": "FAIL",
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()}
+            print(f"  FAIL: {type(e).__name__}: {e}", flush=True)
+            n_fail += 1
+        with open(path, "w") as f:
+            json.dump(row, f, indent=2, default=str)
+
+    print(f"\nDRY-RUN SUMMARY: ok={n_ok} skip={n_skip} fail={n_fail} "
+          f"of {len(combos)}")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,179 @@
+"""Roofline-term extraction from a compiled (SPMD-partitioned) executable.
+
+Sources:
+  * ``compiled.cost_analysis()``  -> HLO FLOPs + bytes accessed (per device —
+    the partitioned module's shapes are per-shard),
+  * ``compiled.as_text()``        -> collective operand bytes, parsed per op
+    kind (all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute), since cost_analysis does not expose them.
+
+Hardware constants: TPU v5e-class — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (single-link effective; multi-link overlap is a perf-pass
+lever, not a baseline assumption).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+# result-shape cost multipliers: ring all-reduce moves ~2x the buffer
+_COLLECTIVE_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+    "ragged-all-to-all": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(pred|[sufc]\d+|bf16)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s+((?:\([^)]*\)|\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute"
+    r"|ragged-all-to-all)(?:-start)?\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-kind weighted bytes from the partitioned HLO text (per device)."""
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVE_FACTOR}
+    raw: Dict[str, int] = {k: 0 for k in _COLLECTIVE_FACTOR}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVE_FACTOR}
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        b = _shape_bytes(shape_str)
+        raw[kind] += b
+        out[kind] += b * _COLLECTIVE_FACTOR[kind]
+        counts[kind] += 1
+    out["_total_weighted"] = sum(v for k, v in out.items()
+                                 if not k.startswith("_"))
+    out["_counts"] = counts          # type: ignore[assignment]
+    out["_raw"] = raw                # type: ignore[assignment]
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float                 # per device
+    hlo_bytes: float                 # per device
+    coll_bytes: float                # per device, weighted
+    model_flops: float               # 6*N*D analytic, whole step, all devices
+    bytes_per_device: float          # from memory_analysis
+    coll_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    raw_cost_analysis: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    coll_bytes_by_kind: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs * chips) — remat/redundancy waste."""
+        total_hlo = self.hlo_flops * self.chips
+        return self.model_flops / total_hlo if total_hlo else 0.0
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "hlo_flops_per_dev": self.hlo_flops,
+            "hlo_bytes_per_dev": self.hlo_bytes,
+            "coll_bytes_per_dev": self.coll_bytes,
+            "model_flops": self.model_flops,
+            "useful_flops_frac": self.useful_flops_frac,
+            "bytes_per_device": self.bytes_per_device,
+            "coll_counts": self.coll_counts,
+            "coll_bytes_by_kind": self.coll_bytes_by_kind,
+            "raw_cost_analysis": self.raw_cost_analysis,
+        }
+
+
+def analyze_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
+                     chips: int, model_flops: float) -> Roofline:
+    """Terms come from the trip-count-corrected HLO-text model (hlo_cost.py);
+    ``compiled.cost_analysis()`` counts scan bodies once, so it is kept only
+    as the uncorrected reference in the JSON."""
+    from repro.launch.hlo_cost import analyze_hlo_text
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):           # older jax returns [dict]
+        cost = cost[0]
+    text = compiled.as_text()
+    hc = analyze_hlo_text(text)
+    mem = compiled.memory_analysis()
+    bytes_per_dev = 0.0
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes"):
+        bytes_per_dev += float(getattr(mem, attr, 0.0) or 0.0)
+    rl = Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=hc.flops, hlo_bytes=hc.hbm_bytes,
+        coll_bytes=hc.coll_bytes,
+        model_flops=model_flops, bytes_per_device=bytes_per_dev,
+        coll_counts=hc.coll_counts)
+    rl.raw_cost_analysis = {"flops": float(cost.get("flops", 0.0)),
+                            "bytes_accessed":
+                                float(cost.get("bytes accessed", 0.0))}
+    rl.coll_bytes_by_kind = hc.coll_bytes_by_kind
+    return rl
+
+
+def model_flops_estimate(cfg, shape, kind: str) -> float:
+    """6·N_active·D for train, 2·N_active·D for inference (whole step,
+    all devices); D = total tokens processed this step."""
+    n_active = cfg.active_params_per_token()
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch * 1          # decode: one token per row
+    return 2.0 * n_active * tokens

@@ -1,0 +1,270 @@
+"""HLO-text cost model with while-loop trip-count multiplication.
+
+``compiled.cost_analysis()`` counts a while (lax.scan) body ONCE — verified
+empirically on this jax/XLA build (see EXPERIMENTS.md §Dry-run methodology):
+a scanned 8-layer stack reports 1/8 of the unrolled FLOPs. Since the whole
+framework scans over layer groups, we recount from ``compiled.as_text()``:
+
+  1. split the module into computations and build per-computation symbol
+     tables (%name -> shape) — compiled HLO references operands by name,
+  2. build the call graph (calls= / condition= / body= / to_apply= /
+     branch_computations=),
+  3. propagate an execution multiplier: while bodies multiply by the trip
+     count from ``backend_config={"known_trip_count":{"n":...}}`` (fallback:
+     the comparison constant in the condition computation),
+  4. FLOPs: every ``dot`` -> 2 * numel(result) * contracted_size,
+     ``convolution`` -> 2 * numel(result) * kernel_spatial * Cin,
+  5. HBM bytes: top-level op lines (entry + while bodies; fusion internals
+     excluded — those live in registers/VMEM) -> result + operand bytes,
+  6. collectives: weighted bytes * multiplier (a collective inside the layer
+     scan fires G times).
+
+All values are per-device (the partitioned module's shapes are per-shard).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_TOKEN = re.compile(
+    r"\b(pred|bf16|f8e4m3fn|f8e5m2|[sufc]\d+)\[([\d,]*)\]")
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_OPCODE = re.compile(r"^\s*(?:\([^)]*\)|[^\s(]+)\s+([a-z0-9\-]+)\(")
+_OPERAND = re.compile(r"%([\w\.\-]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CONST_INT = re.compile(r"=\s*[su]\d+\[\]\s+constant\((\d+)\)")
+_TRIP = re.compile(r'known_trip_count[^\d]*(\d+)')
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+_COLLECTIVE_FACTOR = {
+    "all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+    "all-to-all": 1.0, "collective-permute": 1.0, "ragged-all-to-all": 1.0,
+}
+
+_NO_HBM_OPS = frozenset({
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "add-dependency",
+    "partition-id", "replica-id", "iota", "copy-start", "copy-done",
+})
+
+
+def _tokens(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_TOKEN.findall(text):
+        out.append((dt, [int(x) for x in dims.split(",") if x]))
+    return out
+
+
+def _tok_elems(tok) -> int:
+    n = 1
+    for d in tok[1]:
+        n *= d
+    return n
+
+
+def _tok_bytes(tok) -> int:
+    return _tok_elems(tok) * _DTYPE_BYTES[tok[0]]
+
+
+@dataclasses.dataclass
+class OpLine:
+    name: str
+    opcode: str
+    result_tokens: List[Tuple[str, List[int]]]
+    operands: List[str]
+    raw: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[OpLine] = dataclasses.field(default_factory=list)
+    table: Dict[str, List[Tuple[str, List[int]]]] = dataclasses.field(
+        default_factory=dict)
+
+
+def split_computations(text: str) -> Tuple[Dict[str, Computation],
+                                           Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if not stripped:
+            continue
+        if not line.startswith(" "):
+            m = _COMP_HEADER.match(stripped)
+            if m and stripped.endswith("{") and "->" in stripped:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                if stripped.startswith("ENTRY"):
+                    entry = cur.name
+            continue
+        if stripped.startswith("}") or cur is None:
+            continue
+        dm = _DEF_RE.match(stripped)
+        if not dm:
+            continue
+        name, rhs = dm.group(1), dm.group(2)
+        om = _OPCODE.match(rhs)
+        if om:
+            opcode = om.group(1)
+            head = rhs[: om.end() - len(opcode) - 1]
+            tail = rhs[om.end():]
+            args = tail.split(")", 1)[0] if ")" in tail else tail
+            operands = _OPERAND.findall(args)
+        else:
+            opcode, head, operands = "", rhs, []
+        result_tokens = _tokens(head)
+        op = OpLine(name, opcode, result_tokens, operands, stripped)
+        cur.ops.append(op)
+        cur.table[name] = result_tokens
+    return comps, entry
+
+
+def _trip_count(line: str, comps: Dict[str, Computation]) -> int:
+    m = _TRIP.search(line)
+    if m:
+        return int(m.group(1))
+    cm = re.search(r"condition=%?([\w\.\-]+)", line)
+    if cm and cm.group(1) in comps:
+        consts = [int(x.group(1)) for op in comps[cm.group(1)].ops
+                  for x in _CONST_INT.finditer(op.raw)]
+        if consts:
+            return max(consts)
+    return 1
+
+
+def _dot_flops(op: OpLine, comp: Computation) -> float:
+    res_n = sum(_tok_elems(t) for t in op.result_tokens)
+    m = _CONTRACT.search(op.raw)
+    k = 1
+    if m and op.operands:
+        lhs = comp.table.get(op.operands[0])
+        if lhs and lhs[0][1]:
+            dims = lhs[0][1]
+            for c in [int(x) for x in m.group(1).split(",") if x]:
+                if c < len(dims):
+                    k *= dims[c]
+    return 2.0 * res_n * k
+
+
+def _conv_flops(op: OpLine, comp: Computation) -> float:
+    res_n = sum(_tok_elems(t) for t in op.result_tokens)
+    m = re.search(r"window=\{size=([\dx]+)", op.raw)
+    spatial = 1
+    if m:
+        for s in m.group(1).split("x"):
+            spatial *= int(s)
+    cin = 1
+    if len(op.operands) >= 2:
+        ker = comp.table.get(op.operands[1])
+        if ker and ker[0][1] and len(ker[0][1]) >= 2:
+            cin = ker[0][1][-2]
+    return 2.0 * res_n * spatial * cin
+
+
+def _ragged_dot_flops(op: OpLine, comp: Computation) -> float:
+    # lhs (M,K) x rhs (G,K,N): dense-equivalent 2*M*K*N
+    if len(op.operands) >= 2:
+        lhs = comp.table.get(op.operands[0])
+        rhs = comp.table.get(op.operands[1])
+        if lhs and rhs and lhs[0][1] and len(rhs[0][1]) == 3:
+            mdim, k = lhs[0][1]
+            return 2.0 * mdim * k * rhs[0][1][2]
+    return 0.0
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    coll_bytes_by_kind: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    n_while: int = 0
+    max_trip: int = 1
+
+
+def analyze_hlo_text(text: str) -> HloCost:
+    comps, entry = split_computations(text)
+    if not comps:
+        return HloCost()
+    if entry is None:
+        entry = list(comps)[-1]
+
+    mult: Dict[str, float] = {name: 0.0 for name in comps}
+    in_fusion: Dict[str, bool] = {name: False for name in comps}
+    visited_edges = set()
+
+    def visit(name: str, m: float, fus: bool):
+        if name not in comps or m == 0.0:
+            return
+        mult[name] += m
+        in_fusion[name] = in_fusion[name] or fus
+        for op in comps[name].ops:
+            if op.opcode == "while":
+                trip = _trip_count(op.raw, comps)
+                for role, sub in re.findall(
+                        r"(condition|body)=%?([\w\.\-]+)", op.raw):
+                    visit(sub, m * trip, fus)
+            else:
+                refs = re.findall(
+                    r"(?:calls|to_apply|branch_computations)="
+                    r"\{?%?([\w\.\-]+(?:,\s*%?[\w\.\-]+)*)\}?", op.raw)
+                subs: List[str] = []
+                for r in refs:
+                    subs += [x.strip().lstrip("%") for x in r.split(",")]
+                child_fus = fus or op.opcode == "fusion"
+                for sub in subs:
+                    visit(sub, m, child_fus)
+
+    visit(entry, 1.0, False)
+
+    cost = HloCost()
+    counts = {k: 0 for k in COLLECTIVES}
+    bykind = {k: 0.0 for k in COLLECTIVES}
+    trips = [1]
+    for name, comp in comps.items():
+        m = mult[name]
+        if m <= 0:
+            continue
+        fus = in_fusion[name]
+        for op in comp.ops:
+            if op.opcode == "dot":
+                cost.flops += m * _dot_flops(op, comp)
+            elif op.opcode == "convolution":
+                cost.flops += m * _conv_flops(op, comp)
+            elif op.opcode == "ragged-dot":
+                cost.flops += m * _ragged_dot_flops(op, comp)
+            if op.opcode == "while":
+                cost.n_while += 1
+                trips.append(_trip_count(op.raw, comps))
+            base = op.opcode.replace("-start", "")
+            if base in COLLECTIVES:
+                b = sum(_tok_bytes(t) for t in op.result_tokens)
+                w = b * _COLLECTIVE_FACTOR[base]
+                cost.coll_bytes += m * w
+                counts[base] += max(int(m), 1)
+                bykind[base] += m * w
+            if not fus and op.opcode not in _NO_HBM_OPS:
+                b = sum(_tok_bytes(t) for t in op.result_tokens)
+                for o in op.operands:
+                    toks = comp.table.get(o)
+                    if toks:
+                        b += sum(_tok_bytes(t) for t in toks)
+                cost.hbm_bytes += m * b
+    cost.coll_counts = counts
+    cost.coll_bytes_by_kind = bykind
+    cost.max_trip = max(trips)
+    return cost

@@ -1,0 +1,18 @@
+"""Production mesh construction (function, NOT a module-level constant, so
+importing this module never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 ("data","model") per pod; 2x16x16 with a leading "pod" axis for
+    the 512-chip multi-pod dry-run."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """A 1x1 mesh on whatever single device exists (CPU smoke tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,89 @@
+"""End-to-end LM training driver for the architecture zoo.
+
+On real hardware this runs under the production mesh; on this CPU container
+it drives REDUCED configs (the smoke path used by examples/ and tests):
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --reduced \
+      --steps 200 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import save_pytree
+from repro.configs import ARCH_IDS, get_config, get_reduced
+from repro.data import lm_batches, lm_token_stream
+from repro.launch.steps import make_train_step
+from repro.models.transformer import init_params
+from repro.optim import adam, warmup_cosine
+
+
+def train(arch: str, reduced: bool = True, steps: int = 100, batch: int = 8,
+          seq: int = 128, lr: float = 3e-4, seed: int = 0,
+          moe_path: str = "dropless", log_every: int = 10,
+          ckpt: Optional[str] = None, verbose: bool = True):
+    cfg = get_reduced(arch) if reduced else get_config(arch)
+    key = jax.random.key(seed)
+    params = init_params(key, cfg)
+    n_params = sum(int(x.size) for x in jax.tree.leaves(params))
+    optimizer = adam(warmup_cosine(lr, steps // 10, steps))
+    opt_state = optimizer.init(params)
+    step_fn = jax.jit(make_train_step(cfg, optimizer, moe_path=moe_path,
+                                      remat=False))
+
+    stream = lm_token_stream(jax.random.key(seed + 1), cfg.vocab_size,
+                             max(200_000, batch * (seq + 1) * 4))
+    it = lm_batches(stream, batch, seq, seed=seed)
+    losses = []
+    t0 = time.time()
+    for step in range(steps):
+        b = next(it)
+        if cfg.frontend is not None:
+            from repro.models.frontends import frontend_dim
+            prefix = min(8, seq // 4)
+            key, sub = jax.random.split(key)
+            b["embeds"] = jax.random.normal(
+                sub, (batch, prefix, frontend_dim(cfg.frontend)),
+                cfg.param_dtype)
+            b["tokens"] = b["tokens"][:, :seq - prefix]
+            b["labels"] = b["labels"][:, :seq]
+        params, opt_state, metrics = step_fn(params, opt_state, b)
+        losses.append(float(metrics["ce"]))
+        if verbose and (step % log_every == 0 or step == steps - 1):
+            dt = time.time() - t0
+            print(f"  step {step:5d}  ce={losses[-1]:.4f}  "
+                  f"({dt:.1f}s, {n_params/1e6:.1f}M params)", flush=True)
+    if ckpt:
+        save_pytree(f"{ckpt}/step_{steps}.msgpack",
+                    {"params": params, "losses": losses})
+    return {"arch": cfg.name, "n_params": n_params, "losses": losses,
+            "final_ce": losses[-1], "initial_ce": losses[0]}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--moe-path", default="dropless")
+    ap.add_argument("--ckpt")
+    args = ap.parse_args()
+    out = train(args.arch, reduced=args.reduced, steps=args.steps,
+                batch=args.batch, seq=args.seq, lr=args.lr,
+                moe_path=args.moe_path, ckpt=args.ckpt)
+    print(json.dumps({k: v for k, v in out.items() if k != "losses"},
+                     indent=2))
+
+
+if __name__ == "__main__":
+    main()

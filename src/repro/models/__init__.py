@@ -1,0 +1,10 @@
+from repro.models.common import ModelConfig
+from repro.models.transformer import (abstract_params, decode_step, forward,
+                                      init_params, lm_loss, prefill,
+                                      token_ce_loss)
+from repro.models.cache import init_cache
+
+__all__ = [
+    "ModelConfig", "abstract_params", "decode_step", "forward", "init_params",
+    "lm_loss", "prefill", "token_ce_loss", "init_cache",
+]

@@ -1,0 +1,109 @@
+"""Decode caches for every mixer kind.
+
+Cache pytrees mirror the parameter tree: ``{"groups": {pos_i: stacked (G,...)},
+"rem": [per-layer]}`` so the decode scan can carry them alongside stacked
+params. Kinds:
+
+  global -> full KV          {'k','v': (B,S,KV,hd), 'k_pos': (S,), 'pos': ()}
+  local  -> ring buffer      same but S == min(window, max_seq)
+  mla    -> compressed       {'ckv': (B,S,r), 'krope': (B,S,rh), 'k_pos','pos'}
+  ssd    -> SSM state        {'state': (B,H,P,N), 'conv': (B,cw-1,C)}
+  rec    -> RG-LRU state     {'state': (B,W), 'conv': (B,cw-1,W)}
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, Params
+from repro.models.rglru import rglru_init_cache
+from repro.models.ssm import ssd_init_cache
+
+INT_MAX = jnp.iinfo(jnp.int32).max  # sentinel: excluded by the causal mask k_pos <= q_pos
+
+
+def layer_cache(cfg: ModelConfig, kind: str, batch: int, max_seq: int,
+                dtype) -> Params:
+    if kind == "ssd":
+        return ssd_init_cache(cfg, batch, dtype)
+    if kind == "rec":
+        return rglru_init_cache(cfg, batch, dtype)
+    if kind == "mla":
+        r, rh = cfg.kv_lora_rank, cfg.rope_head_dim
+        return {
+            "ckv": jnp.zeros((batch, max_seq, r), dtype),
+            "krope": jnp.zeros((batch, max_seq, rh), dtype),
+            "k_pos": jnp.full((max_seq,), INT_MAX, jnp.int32),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    s = max_seq
+    if kind == "local":
+        s = min(cfg.sliding_window, max_seq)
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((batch, s, kv, hd), dtype),
+        "v": jnp.zeros((batch, s, kv, hd), dtype),
+        "k_pos": jnp.full((s,), INT_MAX, jnp.int32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=None) -> Params:
+    """Empty cache pytree for the whole stack (pos=0)."""
+    dtype = dtype or cfg.param_dtype
+    pattern = cfg.layer_pattern
+    groups = {}
+    for i, kind in enumerate(pattern):
+        one = layer_cache(cfg, kind, batch, max_seq, dtype)
+        groups[f"pos{i}"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.n_groups, *x.shape)), one)
+    rem = [layer_cache(cfg, pattern[i], batch, max_seq, dtype)
+           for i in range(cfg.n_remainder)]
+    return {"groups": groups, "rem": rem}
+
+
+def cache_window(cfg: ModelConfig, kind: str, max_seq: int) -> int:
+    """Sequence capacity of a given layer kind's cache."""
+    if kind == "local":
+        return min(cfg.sliding_window, max_seq)
+    if kind in ("global", "mla"):
+        return max_seq
+    return 0
+
+
+def full_kv_to_cache(k: jnp.ndarray, v: jnp.ndarray, max_seq: int,
+                     window: int = 0) -> Params:
+    """Pack prefill K/V (B,S,KV,hd) into a decode cache of capacity max_seq
+    (or ring-buffer of size ``window``)."""
+    b, s, kvh, hd = k.shape
+    if window > 0:
+        w = min(window, max_seq)
+        lo = max(0, s - w)
+        pos_idx = jnp.arange(lo, s)
+        slots = pos_idx % w
+        ck = jnp.zeros((b, w, kvh, hd), k.dtype).at[:, slots].set(k[:, pos_idx])
+        cv = jnp.zeros((b, w, kvh, hd), v.dtype).at[:, slots].set(v[:, pos_idx])
+        kp = jnp.full((w,), INT_MAX, jnp.int32).at[slots].set(pos_idx)
+        return {"k": ck, "v": cv, "k_pos": kp,
+                "pos": jnp.asarray(s, jnp.int32)}
+    pad = max_seq - s
+    ck = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    cv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kp = jnp.concatenate([jnp.arange(s, dtype=jnp.int32),
+                          jnp.full((pad,), INT_MAX, jnp.int32)])
+    return {"k": ck, "v": cv, "k_pos": kp, "pos": jnp.asarray(s, jnp.int32)}
+
+
+def mla_kv_to_cache(ckv: jnp.ndarray, krope: jnp.ndarray,
+                    max_seq: int) -> Params:
+    b, s, _ = ckv.shape
+    pad = max_seq - s
+    kp = jnp.concatenate([jnp.arange(s, dtype=jnp.int32),
+                          jnp.full((pad,), INT_MAX, jnp.int32)])
+    return {
+        "ckv": jnp.pad(ckv, ((0, 0), (0, pad), (0, 0))),
+        "krope": jnp.pad(krope, ((0, 0), (0, pad), (0, 0))),
+        "k_pos": kp,
+        "pos": jnp.asarray(s, jnp.int32),
+    }

@@ -1,0 +1,192 @@
+"""Feed-forward layers: dense SwiGLU and Mixture-of-Experts.
+
+MoE has three execution paths:
+  * ``moe_gshard_forward`` — GShard/Switch-style dispatch-einsum with capacity
+    + token dropping. This path has clean GSPMD sharding (experts on the
+    ``model`` axis when divisible → expert parallelism with all-to-all) and is
+    what the multi-pod dry-run lowers.
+  * ``moe_dropless_forward`` — sort-based dropless path using
+    ``jax.lax.ragged_dot`` (MegaBlocks-style). Exact active-FLOPs; used on
+    CPU smoke/federation paths and as the correctness oracle.
+  * ``moe_decode`` — per-token expert-weight gather for single-token decode.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, Params, dense_init, swiglu
+
+MOE_CAPACITY_FACTOR = 1.25
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_dense_ffn(key, cfg: ModelConfig, d_ff: int = 0) -> Params:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d, f), dt),
+        "w_up": dense_init(ks[1], (d, f), dt),
+        "w_down": dense_init(ks[2], (f, d), dt, fan_in=f),
+    }
+
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, e), jnp.float32),
+        "w_gate": dense_init(ks[1], (e, d, f), dt),
+        "w_up": dense_init(ks[2], (e, d, f), dt),
+        "w_down": dense_init(ks[3], (e, f, d), dt, fan_in=f),
+    }
+    if cfg.n_shared_experts > 0:
+        # shared experts act as one dense FFN of width n_shared * d_ff
+        shared_cfg_ff = cfg.n_shared_experts * f
+        p["shared"] = init_dense_ffn(ks[4], cfg, d_ff=shared_cfg_ff)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# dense
+# ---------------------------------------------------------------------------
+
+def dense_ffn(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    h = swiglu(g, u)
+    # row-parallel w_down: bf16 cross-shard reduction (see §Perf)
+    return jnp.einsum("bsf,fd->bsd", h.astype(x.dtype), p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# routing (shared by all MoE paths)
+# ---------------------------------------------------------------------------
+
+def route(p: Params, cfg: ModelConfig, x: jnp.ndarray):
+    """x (..., D) -> (combine_weights (..., k), expert_idx (..., k), aux_loss)."""
+    logits = jnp.einsum("...d,de->...e", x.astype(jnp.float32), p["router"])
+    k = cfg.moe_top_k
+    vals, idx = jax.lax.top_k(logits, k)
+    weights = jax.nn.softmax(vals, axis=-1)
+    # Switch-style load-balance auxiliary loss
+    probs = jax.nn.softmax(logits, axis=-1)                 # (..., E)
+    e = cfg.n_experts
+    me = jnp.mean(probs.reshape(-1, e), axis=0)
+    one_hot = jax.nn.one_hot(idx.reshape(-1), e, dtype=jnp.float32)
+    ce = jnp.mean(one_hot, axis=0)
+    aux = e * jnp.sum(me * ce)
+    return weights, idx, aux
+
+
+# ---------------------------------------------------------------------------
+# GShard dispatch path (multi-pod dry-run / pjit path)
+# ---------------------------------------------------------------------------
+
+def moe_gshard_forward(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+                       capacity_factor: float = MOE_CAPACITY_FACTOR):
+    """x (B,S,D). Dispatch/combine einsums with per-(B-row) expert capacity."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.moe_top_k
+    cap = int(max(1, round(s * k / e * capacity_factor)))
+    # align capacity to the mesh model-axis (16) so it stays shardable
+    cap = -(-cap // 16) * 16
+
+    weights, idx, aux = route(p, cfg, x)                    # (B,S,k)
+    # position of each (token, choice) inside its expert's buffer
+    oh = jax.nn.one_hot(idx, e, dtype=jnp.int32)            # (B,S,k,E)
+    oh_flat = oh.reshape(b, s * k, e)
+    pos_in_e = jnp.cumsum(oh_flat, axis=1) * oh_flat - 1    # (B,S*k,E)
+    pos_in_e = pos_in_e.reshape(b, s, k, e)
+    keep = (pos_in_e < cap) & (oh > 0)                      # drop overflow
+    # dispatch (B,S,E,C) one-hot over capacity slots
+    cap_oh = jax.nn.one_hot(jnp.where(keep, pos_in_e, -1), cap,
+                            dtype=x.dtype)                  # (B,S,k,E,C)
+    dispatch = jnp.sum(cap_oh, axis=2)                      # (B,S,E,C)
+    combine = jnp.sum(cap_oh * weights[..., None, None].astype(x.dtype),
+                      axis=2)                               # (B,S,E,C)
+
+    xe = jnp.einsum("bsec,bsd->becd", dispatch, x)          # (B,E,C,D)
+    g = jnp.einsum("becd,edf->becf", xe, p["w_gate"])
+    u = jnp.einsum("becd,edf->becf", xe, p["w_up"])
+    h = swiglu(g, u)
+    ye = jnp.einsum("becf,efd->becd", h, p["w_down"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    y = jnp.einsum("bsec,becd->bsd", combine, ye)
+    if "shared" in p:
+        y = y + dense_ffn(p["shared"], x)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# dropless sort-based path (CPU smoke / oracle)
+# ---------------------------------------------------------------------------
+
+def moe_dropless_forward(p: Params, cfg: ModelConfig, x: jnp.ndarray):
+    """Exact dropless MoE via argsort + jax.lax.ragged_dot."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.moe_top_k
+    t = b * s
+    xf = x.reshape(t, d)
+    weights, idx, aux = route(p, cfg, x)
+    wf = weights.reshape(t * k)
+    ef = idx.reshape(t * k)
+    token_of = jnp.repeat(jnp.arange(t), k)
+    order = jnp.argsort(ef)
+    xs = xf[token_of[order]]                                 # (t*k, D)
+    group_sizes = jnp.bincount(ef, length=e).astype(jnp.int32)
+
+    g = jax.lax.ragged_dot(xs, p["w_gate"], group_sizes)
+    u = jax.lax.ragged_dot(xs, p["w_up"], group_sizes)
+    h = swiglu(g, u)
+    ys = jax.lax.ragged_dot(h, p["w_down"], group_sizes)     # (t*k, D)
+
+    yw = ys * wf[order][:, None].astype(ys.dtype)
+    y = jnp.zeros((t, d), ys.dtype).at[token_of[order]].add(yw)
+    y = y.reshape(b, s, d).astype(x.dtype)
+    if "shared" in p:
+        y = y + dense_ffn(p["shared"], x)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# decode path (one token per row)
+# ---------------------------------------------------------------------------
+
+def moe_decode(p: Params, cfg: ModelConfig, x: jnp.ndarray):
+    """x (B,1,D): gather the k selected experts' weights per row."""
+    b, s, d = x.shape
+    assert s == 1
+    weights, idx, aux = route(p, cfg, x)                     # (B,1,k)
+    idxf = idx[:, 0, :]                                      # (B,k)
+    wg = p["w_gate"][idxf]                                   # (B,k,D,F)
+    wu = p["w_up"][idxf]
+    wd = p["w_down"][idxf]
+    xe = x[:, 0, :]                                          # (B,D)
+    g = jnp.einsum("bd,bkdf->bkf", xe, wg)
+    u = jnp.einsum("bd,bkdf->bkf", xe, wu)
+    h = swiglu(g, u)
+    ye = jnp.einsum("bkf,bkfd->bkd", h, wd,
+                    preferred_element_type=jnp.float32)
+    y = jnp.einsum("bkd,bk->bd", ye,
+                   weights[:, 0, :].astype(ye.dtype))[:, None, :].astype(x.dtype)
+    if "shared" in p:
+        y = y + dense_ffn(p["shared"], x)
+    return y, aux
+
+
+def moe_forward(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+                path: str = "gshard"):
+    if path == "gshard":
+        return moe_gshard_forward(p, cfg, x)
+    if path == "dropless":
+        return moe_dropless_forward(p, cfg, x)
+    raise ValueError(f"unknown moe path {path!r}")

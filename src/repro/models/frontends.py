@@ -1,0 +1,43 @@
+"""Modality frontend STUBS — the one allowed carve-out.
+
+[vlm] and [audio] architectures specify the transformer backbone only; the
+vision encoder (InternViT/SigLIP + pixel-shuffle projector) and the audio
+codec (EnCodec conv stack / mel frontend) are NOT implemented. Instead,
+``precomputed_*_embeddings`` emit stand-ins with the correct interface shape,
+and ``input_specs()`` uses their ShapeDtypeStruct for the dry-run.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Output feature width of each stubbed frontend.
+_FRONTEND_DIM = {
+    # InternViT-6B patch embeddings after pixel-shuffle (448px/14 -> 32x32
+    # patches, 4x pixel shuffle -> 256 tokens per tile), projector input 3200
+    # is collapsed to the post-projector width here.
+    "vision": 1024,
+    # EnCodec 32kHz frame embedding width (musicgen conditioning stream).
+    "audio": 128,
+}
+
+VLM_IMAGE_TOKENS = 256      # one 448x448 tile after pixel shuffle
+
+
+def frontend_dim(kind: str) -> int:
+    return _FRONTEND_DIM[kind]
+
+
+def precomputed_vision_embeddings(key, batch: int,
+                                  n_tokens: int = VLM_IMAGE_TOKENS,
+                                  dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Stand-in for InternViT patch embeddings, (B, n_tokens, 1024)."""
+    return jax.random.normal(key, (batch, n_tokens, _FRONTEND_DIM["vision"]),
+                             dtype)
+
+
+def precomputed_audio_embeddings(key, batch: int, n_frames: int,
+                                 dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Stand-in for EnCodec frame embeddings, (B, n_frames, 128)."""
+    return jax.random.normal(key, (batch, n_frames, _FRONTEND_DIM["audio"]),
+                             dtype)

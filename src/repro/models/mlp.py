@@ -1,0 +1,60 @@
+"""Small heterogeneous MLP client families — fast CPU stand-ins used by the
+federation benchmarks (the ResNet-1D families in resnet.py are the paper's
+exact models; MLP cohorts keep Table-III-scale sweeps tractable on CPU while
+exercising the identical SQMD protocol: architectures differ across cohorts,
+so no parameter averaging is possible — only messengers)."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPConfig:
+    name: str
+    in_dim: int
+    hidden: Tuple[int, ...]
+    n_classes: int
+
+
+def init_mlp(key, cfg: MLPConfig) -> Params:
+    dims = (cfg.in_dim, *cfg.hidden, cfg.n_classes)
+    layers = []
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        key, sub = jax.random.split(key)
+        layers.append({
+            "w": jax.random.normal(sub, (a, b), jnp.float32) / math.sqrt(a),
+            "b": jnp.zeros((b,), jnp.float32),
+        })
+    return {"layers": layers}
+
+
+def apply_mlp(cfg: MLPConfig, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    h = x.reshape(x.shape[0], -1)
+    n = len(p["layers"])
+    for i, layer in enumerate(p["layers"]):
+        h = h @ layer["w"] + layer["b"]
+        if i < n - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def mlp_family(cfg: MLPConfig):
+    return (lambda key: init_mlp(key, cfg),
+            lambda p, x: apply_mlp(cfg, p, x))
+
+
+def hetero_mlp_zoo(in_dim: int, n_classes: int):
+    """Three capacity tiers mirroring the paper's ResNet8/20/50 split."""
+    return {
+        "mlp-s": mlp_family(MLPConfig("mlp-s", in_dim, (32,), n_classes)),
+        "mlp-m": mlp_family(MLPConfig("mlp-m", in_dim, (64, 64), n_classes)),
+        "mlp-l": mlp_family(MLPConfig("mlp-l", in_dim, (128, 128, 64),
+                                      n_classes)),
+    }

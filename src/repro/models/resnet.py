@@ -1,0 +1,141 @@
+"""The paper's own heterogeneous client families: ResNet-1D 8/20/50.
+
+§IV-B: "we use the widely-used ResNet with different numbers of layers
+(ResNet8, ResNet20, ResNet50) ... for SC and PAD (time series) all 2D
+convolutions are replaced with 1D convolutions". Inputs are (B, L, C_in)
+time series (e.g. 60-dim RR-interval vectors, C_in=1).
+
+Depth layout (CIFAR-style 3-stage ResNet): 8 -> (1,1,1) basic blocks,
+20 -> (3,3,3) basic, 50 -> bottleneck (3,4,6) (the paper gives no exact
+50-layer 1D layout; this matches the standard channel doubling).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNet1DConfig:
+    name: str
+    blocks: Tuple[int, ...] = (1, 1, 1)
+    width: int = 16
+    bottleneck: bool = False
+    n_classes: int = 3
+    in_channels: int = 1
+    pool_stride: int = 2
+
+
+RESNET8 = ResNet1DConfig("resnet8-1d", (1, 1, 1), 16, False)
+RESNET20 = ResNet1DConfig("resnet20-1d", (3, 3, 3), 16, False)
+RESNET50 = ResNet1DConfig("resnet50-1d", (3, 4, 6), 16, True)
+
+
+def _conv_init(key, width: int, c_in: int, c_out: int):
+    scale = 1.0 / math.sqrt(width * c_in)
+    return jax.random.normal(key, (width, c_in, c_out), jnp.float32) * scale
+
+
+def _conv1d(w: jnp.ndarray, x: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
+    """x (B, L, Cin), w (K, Cin, Cout) -> (B, L', Cout), SAME padding."""
+    return jax.lax.conv_general_dilated(
+        x, w, (stride,), "SAME",
+        dimension_numbers=("NHC", "HIO", "NHC"))
+
+
+def _norm(scale, bias, x):
+    """GroupNorm(1) — batch-size-independent (on-device batches are tiny)."""
+    m = jnp.mean(x, axis=(1, 2), keepdims=True)
+    v = jnp.var(x, axis=(1, 2), keepdims=True)
+    return (x - m) * jax.lax.rsqrt(v + 1e-5) * scale + bias
+
+
+def _init_block(key, c_in: int, c_out: int, bottleneck: bool) -> Params:
+    ks = jax.random.split(key, 4)
+    if bottleneck:
+        mid = c_out // 4
+        p = {
+            "w1": _conv_init(ks[0], 1, c_in, mid),
+            "w2": _conv_init(ks[1], 3, mid, mid),
+            "w3": _conv_init(ks[2], 1, mid, c_out),
+            "s1": jnp.ones((mid,)), "b1": jnp.zeros((mid,)),
+            "s2": jnp.ones((mid,)), "b2": jnp.zeros((mid,)),
+            "s3": jnp.ones((c_out,)), "b3": jnp.zeros((c_out,)),
+        }
+    else:
+        p = {
+            "w1": _conv_init(ks[0], 3, c_in, c_out),
+            "w2": _conv_init(ks[1], 3, c_out, c_out),
+            "s1": jnp.ones((c_out,)), "b1": jnp.zeros((c_out,)),
+            "s2": jnp.ones((c_out,)), "b2": jnp.zeros((c_out,)),
+        }
+    if c_in != c_out:
+        p["w_skip"] = _conv_init(ks[3], 1, c_in, c_out)
+    return p
+
+
+def _apply_block(p: Params, x: jnp.ndarray, stride: int,
+                 bottleneck: bool) -> jnp.ndarray:
+    skip = x
+    if "w_skip" in p:
+        skip = _conv1d(p["w_skip"], x, stride)
+    elif stride > 1:
+        skip = x[:, ::stride]
+    if bottleneck:
+        h = jax.nn.relu(_norm(p["s1"], p["b1"], _conv1d(p["w1"], x, 1)))
+        h = jax.nn.relu(_norm(p["s2"], p["b2"], _conv1d(p["w2"], h, stride)))
+        h = _norm(p["s3"], p["b3"], _conv1d(p["w3"], h, 1))
+    else:
+        h = jax.nn.relu(_norm(p["s1"], p["b1"], _conv1d(p["w1"], x, stride)))
+        h = _norm(p["s2"], p["b2"], _conv1d(p["w2"], h, 1))
+    return jax.nn.relu(h + skip)
+
+
+def init_resnet1d(key, cfg: ResNet1DConfig) -> Params:
+    ks = jax.random.split(key, 2 + sum(cfg.blocks))
+    mult = 4 if cfg.bottleneck else 1
+    p: Dict[str, Any] = {
+        "stem": _conv_init(ks[0], 3, cfg.in_channels, cfg.width),
+        "stem_s": jnp.ones((cfg.width,)), "stem_b": jnp.zeros((cfg.width,)),
+        "stages": [],
+    }
+    c_in = cfg.width
+    ki = 1
+    for stage, n_blocks in enumerate(cfg.blocks):
+        c_out = cfg.width * (2 ** stage) * mult
+        blocks = []
+        for b in range(n_blocks):
+            blocks.append(_init_block(ks[ki], c_in, c_out, cfg.bottleneck))
+            ki += 1
+            c_in = c_out
+        p["stages"].append(blocks)
+    p["head_w"] = jax.random.normal(ks[-1], (c_in, cfg.n_classes),
+                                    jnp.float32) / math.sqrt(c_in)
+    p["head_b"] = jnp.zeros((cfg.n_classes,))
+    return p
+
+
+def apply_resnet1d(cfg: ResNet1DConfig, p: Params,
+                   x: jnp.ndarray) -> jnp.ndarray:
+    """x (B, L) or (B, L, C_in) -> logits (B, n_classes)."""
+    if x.ndim == 2:
+        x = x[..., None]
+    h = jax.nn.relu(_norm(p["stem_s"], p["stem_b"], _conv1d(p["stem"], x)))
+    for stage, blocks in enumerate(p["stages"]):
+        for b, bp in enumerate(blocks):
+            stride = cfg.pool_stride if (b == 0 and stage > 0) else 1
+            h = _apply_block(bp, h, stride, cfg.bottleneck)
+    h = jnp.mean(h, axis=1)                                  # global avg pool
+    return h @ p["head_w"] + p["head_b"]
+
+
+def resnet1d_family(cfg: ResNet1DConfig):
+    """(init_fn, apply_fn) pair for the federation model zoo."""
+    return (lambda key: init_resnet1d(key, cfg),
+            lambda p, x: apply_resnet1d(cfg, p, x))

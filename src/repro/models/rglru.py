@@ -1,0 +1,144 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin) [arXiv:2402.19427].
+
+The block: two parallel branches from (B,S,D) —
+  gate branch:      GeLU(W_y x)
+  recurrent branch: conv1d(W_x x) -> RG-LRU linear recurrence
+merged multiplicatively, projected back to D.
+
+The RG-LRU recurrence  h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+is a first-order linear recurrence, so train/prefill runs it with
+``jax.lax.associative_scan`` (log-depth on TPU) instead of a sequential loop —
+this is the TPU-native adaptation of Griffin's "linear scan" kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, Params, dense_init
+
+_C = 8.0  # RG-LRU gate temperature (Griffin's fixed constant)
+
+
+# Gate weights are BLOCK-DIAGONAL (Griffin §2.4 — also the TPU-sharding
+# win: with n_blocks = model-axis size the gate matmuls are block-local, so
+# no cross-shard contraction/all-gather is ever needed; see EXPERIMENTS.md
+# §Perf recurrentgemma iteration 1, which replaced dense (W,W) gates).
+GATE_BLOCKS = 16
+
+
+def _gate_blocks(w: int) -> int:
+    nb = GATE_BLOCKS
+    while w % nb:
+        nb //= 2
+    return max(nb, 1)
+
+
+def init_rglru(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    nb = _gate_blocks(w)
+    wb = w // nb
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 6)
+    return {
+        "w_y": dense_init(ks[0], (d, w), dt),               # gate branch
+        "w_x": dense_init(ks[1], (d, w), dt),               # recurrent branch
+        "conv_w": dense_init(ks[2], (cfg.conv_width, w), dt,
+                             fan_in=cfg.conv_width),
+        "conv_b": jnp.zeros((w,), dt),
+        # block-diagonal recurrence/input gates (nb, wb, wb)
+        "w_a": dense_init(ks[3], (nb, wb, wb), jnp.float32, fan_in=wb),
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_i": dense_init(ks[4], (nb, wb, wb), jnp.float32, fan_in=wb),
+        "b_i": jnp.zeros((w,), jnp.float32),
+        # Λ init so a = sigmoid(Λ) ∈ [0.9, 0.999] (Griffin init)
+        "lam": jnp.linspace(2.2, 6.9, w, dtype=jnp.float32),
+        "w_out": dense_init(ks[5], (w, d), dt, fan_in=w),
+    }
+
+
+def _conv(p: Params, u: jnp.ndarray, prior: jnp.ndarray = None):
+    w = p["conv_w"]
+    width = w.shape[0]
+    if prior is None:
+        prior = jnp.zeros((u.shape[0], width - 1, u.shape[-1]), u.dtype)
+    up = jnp.concatenate([prior, u], axis=1)
+    out = sum(up[:, i:i + u.shape[1], :] * w[i] for i in range(width))
+    return (out + p["conv_b"]).astype(u.dtype)
+
+
+def _gates(p: Params, xr: jnp.ndarray):
+    """Returns (a_t, gated input) both fp32. xr (B,S,W); block-diagonal
+    gate matmuls (block dim shardable over 'model' with zero collectives)."""
+    xf = xr.astype(jnp.float32)
+    nb, wb, _ = p["w_a"].shape
+    xb = xf.reshape(*xf.shape[:-1], nb, wb)
+    r = jax.nn.sigmoid(
+        jnp.einsum("...nw,nwv->...nv", xb, p["w_a"]).reshape(xf.shape)
+        + p["b_a"])
+    i = jax.nn.sigmoid(
+        jnp.einsum("...nw,nwv->...nv", xb, p["w_i"]).reshape(xf.shape)
+        + p["b_i"])
+    log_a = -_C * r * jax.nn.softplus(p["lam"])             # log a_t <= 0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+    return a, gated
+
+
+def rglru_scan(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray = None):
+    """h_t = a_t h_{t-1} + b_t via associative scan over axis 1 (S)."""
+    if h0 is not None:
+        # fold the initial state into the first step
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_forward(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+                  return_state: bool = False):
+    """Full-sequence recurrent block. x (B,S,D)."""
+    y_gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_y"])
+                         .astype(jnp.float32))
+    xr = jnp.einsum("bsd,dw->bsw", x, p["w_x"])
+    conv_in = xr
+    xr = _conv(p, xr)
+    a, b = _gates(p, xr)
+    h = rglru_scan(a, b)                                    # (B,S,W) fp32
+    merged = (h * y_gate).astype(x.dtype)
+    # row-parallel w_out: bf16 cross-shard reduction (see §Perf)
+    out = jnp.einsum("bsw,wd->bsd", merged, p["w_out"])
+    if return_state:
+        cache = {"state": h[:, -1, :],
+                 "conv": conv_in[:, -(cfg.conv_width - 1):, :]}
+        return out, cache
+    return out
+
+
+def rglru_decode(p: Params, cfg: ModelConfig, x: jnp.ndarray, cache: Params):
+    """One-token step. cache: {'state': (B,W) fp32, 'conv': (B,cw-1,W)}."""
+    y_gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_y"])
+                         .astype(jnp.float32))
+    xr = jnp.einsum("bsd,dw->bsw", x, p["w_x"])             # (B,1,W)
+    new_conv = jnp.concatenate([cache["conv"], xr], axis=1)[:, 1:, :]
+    xr = _conv(p, xr, prior=cache["conv"])
+    a, b = _gates(p, xr)                                    # (B,1,W)
+    h = a[:, 0] * cache["state"] + b[:, 0]                  # (B,W)
+    merged = (h[:, None, :] * y_gate).astype(x.dtype)
+    out = jnp.einsum("bsw,wd->bsd", merged, p["w_out"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, {"state": h, "conv": new_conv}
+
+
+def rglru_init_cache(cfg: ModelConfig, batch: int, dtype) -> Params:
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "state": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+    }

@@ -1,0 +1,202 @@
+"""Mamba-2 SSD (state-space duality) mixer [arXiv:2405.21060].
+
+TPU adaptation: the SSD chunked form is used for train/prefill — quadratic
+attention-like compute *within* VMEM-sized chunks (MXU-friendly matmuls) and a
+tiny recurrent state handoff *across* chunks (``lax.scan``). Decode is the
+constant-memory recurrence. Single B/C group (G=1), scalar-per-head A.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, Params, dense_init
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    di = cfg.d_inner
+    h = cfg.ssm_heads
+    p = di // h
+    n = cfg.ssm_state
+    return di, h, p, n
+
+
+def init_ssd(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    di, h, p, n = _dims(cfg)
+    dt = cfg.param_dtype
+    conv_ch = di + 2 * n                       # conv over [x, B, C]
+    ks = jax.random.split(key, 4)
+    return {
+        # in_proj -> [z (di), x (di), B (n), C (n), dt (h)]
+        "w_in": dense_init(ks[0], (d, 2 * di + 2 * n + h), dt),
+        "conv_w": dense_init(ks[1], (cfg.conv_width, conv_ch), dt,
+                             fan_in=cfg.conv_width),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "a_log": jnp.zeros((h,), jnp.float32),              # A = -exp(a_log)
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm_scale": jnp.ones((di,), dt),                  # gated RMSNorm
+        "w_out": dense_init(ks[3], (di, d), dt, fan_in=di),
+    }
+
+
+def _split_in(p: Params, cfg: ModelConfig, x: jnp.ndarray):
+    di, h, _, n = _dims(cfg)
+    proj = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    z = proj[..., :di]
+    xin = proj[..., di:2 * di]
+    b_ = proj[..., 2 * di:2 * di + n]
+    c_ = proj[..., 2 * di + n:2 * di + 2 * n]
+    dt_raw = proj[..., 2 * di + 2 * n:]
+    return z, xin, b_, c_, dt_raw
+
+
+def _gated_norm(p: Params, y: jnp.ndarray, z: jnp.ndarray,
+                eps: float) -> jnp.ndarray:
+    yf = (y * jax.nn.silu(z.astype(jnp.float32))).astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps)
+            * p["norm_scale"].astype(jnp.float32))
+
+
+def _causal_conv(p: Params, u: jnp.ndarray, prior: jnp.ndarray = None):
+    """Depthwise causal conv, width W. u (B,S,C). prior: (B,W-1,C) history."""
+    w = p["conv_w"]                                         # (W, C)
+    width = w.shape[0]
+    if prior is None:
+        prior = jnp.zeros((u.shape[0], width - 1, u.shape[-1]), u.dtype)
+    up = jnp.concatenate([prior, u], axis=1)
+    out = sum(up[:, i:i + u.shape[1], :] * w[i] for i in range(width))
+    return jax.nn.silu((out + p["conv_b"]).astype(jnp.float32)).astype(u.dtype)
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """x (..., q) -> (..., q, q) with S[i,j] = sum_{j<k<=i} x[k], -inf above diag."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_scan(xh: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+             b_: jnp.ndarray, c_: jnp.ndarray, chunk: int,
+             init_state: jnp.ndarray = None):
+    """Chunked SSD.
+
+    xh (B,S,H,P) head inputs; dt (B,S,H) positive step sizes; a (H,) negative;
+    b_/c_ (B,S,N) single-group SSM in/out projections.
+    Returns (y (B,S,H,P) fp32, final_state (B,H,P,N) fp32).
+    """
+    bsz, s, h, p = xh.shape
+    n = b_.shape[-1]
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_ = jnp.pad(b_, ((0, 0), (0, pad), (0, 0)))
+        c_ = jnp.pad(c_, ((0, 0), (0, pad), (0, 0)))
+
+    q = chunk
+    xc = xh.reshape(bsz, nc, q, h, p).astype(jnp.float32)
+    dtc = dt.reshape(bsz, nc, q, h).astype(jnp.float32)
+    bc = b_.reshape(bsz, nc, q, n).astype(jnp.float32)
+    cc = c_.reshape(bsz, nc, q, n).astype(jnp.float32)
+
+    da = dtc * a                                            # (B,C,Q,H) <= 0
+    da_cs = jnp.cumsum(da, axis=2)                          # within-chunk
+    x_dt = xc * dtc[..., None]                              # dt-discretized input
+
+    # 1) within-chunk (quadratic, MXU): L[b,c,h,i,j] decay, i >= j
+    l_mat = jnp.exp(_segsum(da.transpose(0, 1, 3, 2)))      # (B,C,H,Q,Q)
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc)              # (B,C,Q,Q)
+    y_diag = jnp.einsum("bcij,bchij,bcjhp->bcihp", cb, l_mat, x_dt)
+
+    # 2) per-chunk end states
+    decay_to_end = jnp.exp(da_cs[:, :, -1:, :] - da_cs)     # (B,C,Q,H)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", bc, decay_to_end, x_dt)
+
+    # 3) cross-chunk recurrence (tiny scan over chunk index)
+    chunk_decay = jnp.exp(jnp.sum(da, axis=2))              # (B,C,H)
+
+    def step(carry, inp):
+        st, dec = inp                                       # (B,H,P,N),(B,H)
+        prev = carry
+        new = prev * dec[..., None, None] + st
+        return new, prev
+
+    init = (jnp.zeros((bsz, h, p, n), jnp.float32)
+            if init_state is None else init_state.astype(jnp.float32))
+    final_state, prev_states = jax.lax.scan(
+        step, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)      # (B,C,H,P,N)
+
+    # 4) contribution of previous chunks' state
+    in_decay = jnp.exp(da_cs)                               # (B,C,Q,H)
+    y_off = jnp.einsum("bcin,bchpn,bcih->bcihp", cc, prev_states, in_decay)
+
+    y = (y_diag + y_off).reshape(bsz, nc * q, h, p)[:, :s]
+    return y, final_state
+
+
+def ssd_forward(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+                return_state: bool = False):
+    """Full-sequence Mamba-2 mixer. x (B,S,D) -> (B,S,D)."""
+    di, h, ph, n = _dims(cfg)
+    z, xin, b_, c_, dt_raw = _split_in(p, cfg, x)
+    conv_in = jnp.concatenate([xin, b_, c_], axis=-1)
+    conv_out = _causal_conv(p, conv_in)
+    xin, b_, c_ = (conv_out[..., :di], conv_out[..., di:di + n],
+                   conv_out[..., di + n:])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    xh = xin.reshape(*xin.shape[:2], h, ph)
+    y, state = ssd_scan(xh, dt, a, b_, c_, cfg.ssm_chunk)
+    y = y + p["d_skip"][:, None] * xh.astype(jnp.float32)
+    y = y.reshape(*x.shape[:2], di)
+    y = _gated_norm(p, y, z, cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y.astype(x.dtype), p["w_out"])
+    if return_state:
+        conv_tail = conv_in[:, -(cfg.conv_width - 1):, :]
+        return out, {"state": state, "conv": conv_tail}
+    return out
+
+
+def ssd_decode(p: Params, cfg: ModelConfig, x: jnp.ndarray, cache: Params):
+    """One-token recurrent step. cache: {'state': (B,H,P,N), 'conv': (B,W-1,C)}."""
+    di, h, ph, n = _dims(cfg)
+    z, xin, b_, c_, dt_raw = _split_in(p, cfg, x)           # all (B,1,·)
+    conv_in = jnp.concatenate([xin, b_, c_], axis=-1)       # (B,1,C)
+    conv_out = _causal_conv(p, conv_in, prior=cache["conv"])
+    new_conv = jnp.concatenate([cache["conv"], conv_in], axis=1)[:, 1:, :]
+    xin, b_, c_ = (conv_out[..., :di], conv_out[..., di:di + n],
+                   conv_out[..., di + n:])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,H)
+    a = -jnp.exp(p["a_log"])
+    xh = xin[:, 0].reshape(-1, h, ph).astype(jnp.float32)   # (B,H,P)
+    bv = b_[:, 0].astype(jnp.float32)                       # (B,N)
+    cv = c_[:, 0].astype(jnp.float32)
+    decay = jnp.exp(dt * a)                                 # (B,H)
+    dx = xh * dt[..., None]                                 # (B,H,P)
+    state = (cache["state"] * decay[..., None, None]
+             + jnp.einsum("bhp,bn->bhpn", dx, bv))
+    y = jnp.einsum("bhpn,bn->bhp", state, cv) + p["d_skip"][:, None] * xh
+    y = y.reshape(x.shape[0], 1, di)
+    y = _gated_norm(p, y, z, cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y.astype(x.dtype), p["w_out"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, {"state": state, "conv": new_conv}
+
+
+def ssd_init_cache(cfg: ModelConfig, batch: int, dtype) -> Params:
+    di, h, ph, n = _dims(cfg)
+    conv_ch = di + 2 * n
+    return {
+        "state": jnp.zeros((batch, h, ph, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_ch), dtype),
+    }

@@ -1,0 +1,9 @@
+from repro.optim.optimizers import (Optimizer, adam, adamw, apply_updates,
+                                    clip_by_global_norm, sgd)
+from repro.optim.schedules import (constant, cosine_decay, linear_warmup,
+                                   warmup_cosine)
+
+__all__ = [
+    "Optimizer", "adam", "adamw", "apply_updates", "clip_by_global_norm",
+    "sgd", "constant", "cosine_decay", "linear_warmup", "warmup_cosine",
+]

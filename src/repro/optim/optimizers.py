@@ -1,0 +1,116 @@
+"""Minimal optax-free optimizers (optax is not installed in this container).
+
+Same (init, update) contract as optax: ``update`` maps (grads, state, params)
+-> (updates, state); ``apply_updates`` adds them. All optimizer math runs in
+fp32 regardless of param dtype (bf16-safe), with per-leaf fp32 moments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+Schedule = Union[float, Callable[[jnp.ndarray], jnp.ndarray]]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Params], Any]
+    update: Callable[[Params, Any, Optional[Params]], Any]
+
+
+def _lr_at(lr: Schedule, step: jnp.ndarray) -> jnp.ndarray:
+    return jnp.asarray(lr(step) if callable(lr) else lr, jnp.float32)
+
+
+def apply_updates(params: Params, updates: Params) -> Params:
+    return jax.tree.map(
+        lambda p, u: (p + u.astype(p.dtype)).astype(p.dtype), params, updates)
+
+
+def clip_by_global_norm(grads: Params, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+# ---------------------------------------------------------------------------
+# SGD (+momentum)
+# ---------------------------------------------------------------------------
+
+class SGDState(NamedTuple):
+    step: jnp.ndarray
+    momentum: Any
+
+
+def sgd(lr: Schedule, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        mom = (jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+               if momentum else None)
+        return SGDState(step=jnp.zeros((), jnp.int32), momentum=mom)
+
+    def update(grads, state, params=None):
+        lr_t = _lr_at(lr, state.step)
+        if momentum:
+            mom = jax.tree.map(
+                lambda m, g: momentum * m + g.astype(jnp.float32),
+                state.momentum, grads)
+            updates = jax.tree.map(lambda m: -lr_t * m, mom)
+            return updates, SGDState(state.step + 1, mom)
+        updates = jax.tree.map(lambda g: -lr_t * g.astype(jnp.float32), grads)
+        return updates, SGDState(state.step + 1, None)
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adam / AdamW
+# ---------------------------------------------------------------------------
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def adam(lr: Schedule, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamState(step=jnp.zeros((), jnp.int32),
+                         mu=jax.tree.map(z, params),
+                         nu=jax.tree.map(z, params))
+
+    def update(grads, state, params=None):
+        step = state.step + 1
+        lr_t = _lr_at(lr, state.step)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(m, v, p):
+            u = -lr_t * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay and p is not None:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            return u
+
+        if weight_decay:
+            updates = jax.tree.map(upd, mu, nu, params)
+        else:
+            updates = jax.tree.map(lambda m, v: upd(m, v, None), mu, nu)
+        return updates, AdamState(step, mu, nu)
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: Schedule, weight_decay: float = 0.01, **kw) -> Optimizer:
+    return adam(lr, weight_decay=weight_decay, **kw)

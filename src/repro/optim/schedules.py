@@ -1,0 +1,33 @@
+"""Learning-rate schedules (callables of the int32 step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup(base_lr: float, warmup_steps: int):
+    def fn(step):
+        frac = jnp.minimum(step.astype(jnp.float32) / max(warmup_steps, 1), 1.0)
+        return base_lr * frac
+    return fn
+
+
+def cosine_decay(base_lr: float, decay_steps: int, alpha: float = 0.0):
+    def fn(step):
+        t = jnp.minimum(step.astype(jnp.float32) / max(decay_steps, 1), 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return base_lr * ((1 - alpha) * cos + alpha)
+    return fn
+
+
+def warmup_cosine(base_lr: float, warmup_steps: int, decay_steps: int,
+                  alpha: float = 0.0):
+    wu = linear_warmup(base_lr, warmup_steps)
+    cd = cosine_decay(base_lr, max(decay_steps - warmup_steps, 1), alpha)
+    def fn(step):
+        return jnp.where(step < warmup_steps, wu(step),
+                         cd(step - warmup_steps))
+    return fn

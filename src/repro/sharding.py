@@ -1,0 +1,361 @@
+"""GSPMD sharding rules for params, optimizer state, batches, and caches.
+
+Mesh axes: ("data", "model") single-pod 16x16, ("pod", "data", "model")
+multi-pod 2x16x16. Policy (DESIGN.md §7):
+
+  batch dims            -> ("pod","data")   [data parallel across pods]
+  attention heads       -> "model" when n_heads  % axis == 0 (else replicate)
+  kv heads (GQA)        -> "model" when n_kv     % axis == 0 (else replicate:
+                           kv=8 < 16 on most assigned archs)
+  d_ff / lru / d_inner  -> "model" (Megatron col/row parallel)
+  vocab (embed/lm_head) -> "model" when divisible
+  MoE experts           -> "model" when n_experts % axis == 0 (expert
+                           parallelism: deepseek-v2 160e) else tensor-
+                           parallel inside experts (mixtral 8e)
+  long_500k KV caches   -> sequence dim over "data" (flash-decode style)
+
+Every rule degrades to replication when the dim is not divisible by the
+axis size — tiny archs (gemma3-1b heads=4, qwen2 heads=14) simply replicate
+their attention params, which the roofline table then shows as
+memory-bound (that is signal, not a bug).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    """Beyond-baseline sharding strategies (EXPERIMENTS.md §Perf).
+
+    dp_over_model — pure data parallelism: the batch shards over EVERY mesh
+        axis (incl. "model") and all params replicate. The right call for
+        small archs whose head counts don't divide the model axis (qwen2 14H,
+        gemma3 4H): baseline tensor parallelism replicates their attention
+        compute 16x, pure DP removes it at the cost of a (tiny-model) grad
+        all-reduce over 256 chips.
+    fsdp — ZeRO-3-style: params and optimizer moments additionally shard
+        over "data" on their largest divisible dim; GSPMD all-gathers
+        weights at use. Required to FIT deepseek-v2-236b (+Adam) on v5e.
+    """
+    dp_over_model: bool = False
+    fsdp: bool = False
+
+
+BASELINE = ShardingPolicy()
+
+
+def batch_axes(mesh: Mesh, policy: ShardingPolicy = BASELINE
+               ) -> Tuple[str, ...]:
+    if policy.dp_over_model:
+        return tuple(mesh.axis_names)
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name]
+
+
+def _div(dim: int, mesh: Mesh, axis: str = "model") -> bool:
+    return dim > 0 and dim % _axis_size(mesh, axis) == 0
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+def _layer_param_spec(path: str, leaf, cfg: ModelConfig, mesh: Mesh) -> P:
+    """Spec for one per-layer leaf, path like 'mixer/wq' (no group dim)."""
+    m = "model"
+    shp = leaf.shape
+    name = path.split("/")[-1]
+
+    # --- attention (GQA) ---
+    if name == "wq":
+        if len(shp) == 3:  # (D, H, hd)
+            return P(None, m, None) if _div(cfg.n_heads, mesh) else P()
+        return P(None, m) if _div(shp[-1], mesh) else P()     # mla direct q
+    if name in ("wk", "wv"):
+        return P(None, m, None) if _div(cfg.n_kv_heads, mesh) else P()
+    if name == "wo":
+        return P(m, None, None) if _div(shp[0], mesh) else P()
+    if name == "bq":
+        return P(m, None) if _div(cfg.n_heads, mesh) else P()
+    if name in ("bk", "bv"):
+        return P(m, None) if _div(cfg.n_kv_heads, mesh) else P()
+
+    # --- MLA ---
+    if name == "w_dkv":
+        return P(None, m) if _div(shp[1], mesh) else P()
+    if name in ("w_uk", "w_uv", "w_uq"):
+        return P(None, m, None) if _div(shp[1], mesh) else P()
+    if name == "w_dq":
+        return P(None, m) if _div(shp[1], mesh) else P()
+
+    # --- MoE ---
+    if name == "router":
+        return P()
+    if path.endswith("ffn/w_gate") or path.endswith("ffn/w_up"):
+        if len(shp) == 3:  # (E, D, F)
+            if _div(cfg.n_experts, mesh):
+                return P(m, None, None)                      # expert parallel
+            return P(None, None, m) if _div(shp[2], mesh) else P()
+        return P(None, m) if _div(shp[1], mesh) else P()     # dense (D, F)
+    if path.endswith("ffn/w_down"):
+        if len(shp) == 3:  # (E, F, D)
+            if _div(cfg.n_experts, mesh):
+                return P(m, None, None)
+            return P(None, m, None) if _div(shp[1], mesh) else P()
+        return P(m, None) if _div(shp[0], mesh) else P()     # dense (F, D)
+    # shared experts under ffn/shared/* handled by the dense branches above.
+
+    # --- SSD (mamba2) ---
+    if name == "w_in":
+        return P(None, m) if _div(shp[1], mesh) else P()
+    if name == "w_out" and len(shp) == 2:
+        return P(m, None) if _div(shp[0], mesh) else P()
+
+    # --- RG-LRU ---
+    if name in ("w_y", "w_x"):
+        return P(None, m) if _div(shp[1], mesh) else P()
+    if name in ("w_a", "w_i"):
+        # block-diagonal gates (nb, wb, wb): shard the block dim — gate
+        # matmuls become shard-local (no collective)
+        return P(m, None, None) if _div(shp[0], mesh) else P()
+
+    # norms, biases, conv filters, scalars: replicate
+    return P()
+
+
+def _top_param_spec(path: str, leaf, cfg: ModelConfig, mesh: Mesh) -> P:
+    name = path.split("/")[-1]
+    if name == "embed":
+        return P("model", None) if _div(cfg.vocab_size, mesh) else P()
+    if name == "lm_head":
+        return P(None, "model") if _div(cfg.vocab_size, mesh) else P()
+    if name == "frontend_proj":
+        return P()
+    return P()
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+# FSDP applies ONLY to these per-layer param paths (the MoE expert weights —
+# ~96% of deepseek-v2's bytes). Extending it to attention/MLA projections
+# measured a 16x attention-flop regression: GSPMD resolves the conflict
+# between r-sharded-over-data w_uk and batch-sharded-over-data activations
+# by REPLICATING the batch downstream (§Perf dsv2 iteration 1, refuted part).
+_FSDP_PATHS = ("ffn/w_gate", "ffn/w_up", "ffn/w_down",
+               "ffn/shared/w_gate", "ffn/shared/w_up", "ffn/shared/w_down")
+
+
+def _fsdp_eligible(path: str) -> bool:
+    return any(path.endswith(s) for s in _FSDP_PATHS)
+
+
+def _add_fsdp(spec: P, shape, mesh: Mesh, skip_lead: bool) -> P:
+    """Shard the largest free, divisible dim over 'data' (ZeRO-3 layout)."""
+    dsz = _axis_size(mesh, "data")
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    best, best_dim = -1, -1
+    start = 1 if skip_lead else 0
+    for i in range(start, len(shape)):
+        if entries[i] is None and shape[i] % dsz == 0 and shape[i] > best_dim:
+            best, best_dim = i, shape[i]
+    if best >= 0 and best_dim >= 4 * dsz:    # skip tiny vectors
+        entries[best] = "data"
+    return P(*entries)
+
+
+def param_specs(params: Any, cfg: ModelConfig, mesh: Mesh,
+                policy: ShardingPolicy = BASELINE) -> Any:
+    """PartitionSpec pytree matching a params pytree (stacked groups get a
+    leading None for the scan dim)."""
+
+    def spec(path, leaf):
+        p = _path_str(path)
+        if policy.dp_over_model:
+            return P(*([None] * len(leaf.shape)))
+        if p.startswith("groups/"):
+            sub = p.split("/", 2)[2]          # strip groups/pos{i}/
+            s = _layer_param_spec(sub, _drop_lead(leaf), cfg, mesh)
+            s = P(None, *s)                   # leading scan dim
+            if policy.fsdp and _fsdp_eligible(sub):
+                s = _add_fsdp(s, leaf.shape, mesh, skip_lead=True)
+            return s
+        if p.startswith("rem/"):
+            sub = p.split("/", 2)[2]
+            s = _layer_param_spec(sub, leaf, cfg, mesh)
+            if policy.fsdp and _fsdp_eligible(sub):
+                s = _add_fsdp(s, leaf.shape, mesh, skip_lead=False)
+            return s
+        return _top_param_spec(p, leaf, cfg, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+class _FakeLeaf:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def _drop_lead(leaf):
+    return _FakeLeaf(leaf.shape[1:])
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_specs(batch: Any, mesh: Mesh,
+                policy: ShardingPolicy = BASELINE) -> Any:
+    """Shard every batch leaf's leading (batch) dim over ("pod","data")
+    (every axis under dp_over_model)."""
+    ba = batch_axes(mesh, policy)
+    total = 1
+    for a in ba:
+        total *= _axis_size(mesh, a)
+
+    def spec(leaf):
+        b = leaf.shape[0]
+        if b % total == 0:
+            return P(ba, *([None] * (len(leaf.shape) - 1)))
+        return P(*([None] * len(leaf.shape)))
+
+    return jax.tree.map(spec, batch)
+
+
+def cache_specs(cache: Any, cfg: ModelConfig, mesh: Mesh,
+                shard_seq_threshold: int = 65536) -> Any:
+    """Decode-cache specs. Batch dim over ("pod","data") when divisible;
+    for long-context single-request decode (batch=1) the KV sequence dim
+    shards over "data" instead (distributed flash-decode)."""
+    ba = batch_axes(mesh)
+    total = 1
+    for a in ba:
+        total *= _axis_size(mesh, a)
+    dsz = _axis_size(mesh, "data")
+
+    def spec(path, leaf):
+        p = _path_str(path)
+        name = p.split("/")[-1]
+        stacked = p.startswith("groups/")
+        shp = leaf.shape[1:] if stacked else leaf.shape
+        if name == "pos" or name == "k_pos":
+            s = P(*([None] * len(shp)))
+        elif name in ("k", "v"):                    # (B, S, KV, hd)
+            if shp[0] % total == 0:
+                s = P(ba, None, None, None)
+            elif shp[1] % dsz == 0 and shp[1] >= shard_seq_threshold:
+                s = P(None, "data", None, None)
+            else:
+                s = P(None, None, None, None)
+        elif name in ("ckv", "krope"):              # (B, S, r)
+            if shp[0] % total == 0:
+                s = P(ba, None, None)
+            elif shp[1] % dsz == 0 and shp[1] >= shard_seq_threshold:
+                s = P(None, "data", None)
+            else:
+                s = P(None, None, None)
+        elif name == "state":
+            if len(shp) == 4:                       # ssd (B,H,P,N)
+                hdim = shp[1]
+                s = P(ba if shp[0] % total == 0 else None,
+                      "model" if _div(hdim, mesh) else None, None, None)
+            else:                                   # rglru (B,W)
+                s = P(ba if shp[0] % total == 0 else None,
+                      "model" if _div(shp[1], mesh) else None)
+        elif name == "conv":                        # (B, cw-1, C)
+            s = P(ba if shp[0] % total == 0 else None, None,
+                  "model" if _div(shp[2], mesh) else None)
+        else:
+            s = P(*([None] * len(shp)))
+        if stacked:
+            return P(None, *s)
+        return s
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+# ---------------------------------------------------------------------------
+# optimizer-state specs
+# ---------------------------------------------------------------------------
+
+def opt_specs(opt_state: Any, pspecs: Any,
+              mesh: Optional[Mesh] = None,
+              policy: ShardingPolicy = BASELINE) -> Any:
+    """Adam/SGD moments share the param layout; scalars replicate.
+
+    Under FSDP, moments additionally shard over "data" on every divisible
+    dim (ZeRO-1: the update is elementwise, so moment layout is free — the
+    only cost is a reshard of the fresh gradient once per step).
+    """
+    from repro.optim.optimizers import AdamState, SGDState
+    mspecs = pspecs
+    if policy.fsdp and mesh is not None:
+        def widen(path, s):
+            leaf_shape = getattr(s, "_leaf_shape", None)
+            return s
+        # moments mirror params but with the fsdp dim added wherever the
+        # param spec left a divisible dim free (shapes match params 1:1)
+        def add(spec, leaf):
+            flat = [a for e in spec if e is not None
+                    for a in (e if isinstance(e, tuple) else (e,))]
+            if "data" in flat:
+                return spec                       # already data-sharded
+            return _add_fsdp(spec, leaf.shape, mesh,
+                             skip_lead=len(spec) > 0 and spec[0] is None
+                             and len(leaf.shape) > 3)
+        if isinstance(opt_state, AdamState):
+            mspecs = jax.tree.map(
+                add, pspecs, opt_state.mu,
+                is_leaf=lambda x: isinstance(x, P))
+    if isinstance(opt_state, AdamState):
+        return AdamState(step=P(), mu=mspecs, nu=mspecs)
+    if isinstance(opt_state, SGDState):
+        mom = None if opt_state.momentum is None else mspecs
+        return SGDState(step=P(), momentum=mom)
+    raise TypeError(f"unknown optimizer state {type(opt_state)}")
+
+
+def to_named(spec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def make_fsdp_gather_hook(cfg: ModelConfig, mesh: Mesh):
+    """ZeRO-3 weight gather: constrain each scan group's FSDP-stored leaves
+    back to their tensor-parallel layout at point of use, so GSPMD inserts a
+    per-group weight all-gather over "data" (instead of resharding the batch
+    activations). Install with transformer.set_layer_param_hook."""
+
+    def hook(gp):
+        def f(path, leaf):
+            p = _path_str(path)                  # pos{i}/ffn/w_gate
+            sub = p.split("/", 1)[1] if "/" in p else p
+            if _fsdp_eligible(sub):
+                s = _layer_param_spec(sub, leaf, cfg, mesh)
+                return jax.lax.with_sharding_constraint(
+                    leaf, NamedSharding(mesh, s))
+            return leaf
+        return jax.tree_util.tree_map_with_path(f, gp)
+
+    return hook

@@ -1,0 +1,10 @@
+import jax
+import pytest
+
+# Smoke tests and benches must see the single real CPU device (the dry-run
+# sets XLA_FLAGS itself, in its own process). Do NOT force device counts here.
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.key(0)

@@ -1,0 +1,90 @@
+"""Data substrate tests: generators match Table I statistics; partition
+semantics (8:1:1, sparsity, augmentation)."""
+import numpy as np
+import pytest
+
+from repro.data import (apply_sparsity, fmnist_like, lm_token_stream,
+                        make_splits, pad_like, pack_cohort, sc_like,
+                        sliding_window_augment, split_client)
+
+import jax
+
+
+def test_table1_statistics():
+    sc = sc_like()
+    pad = pad_like()
+    fm = fmnist_like()
+    assert (sc.n_clients, sc.n_classes) == (32, 3)
+    assert (pad.n_clients, pad.n_classes) == (28, 2)
+    assert (fm.n_clients, fm.n_classes) == (20, 10)
+    assert pad.feature_len == 60          # RR-interval vectors
+
+
+def test_fmnist_one_class_removed_per_client():
+    fm = fmnist_like()
+    for n in range(fm.n_clients):
+        present = set(np.unique(fm.client_y[n]).tolist())
+        assert len(present) == 9, "exactly one class must be removed"
+
+
+def test_reference_set_has_server_labels():
+    ds = sc_like()
+    assert len(ds.ref_x) == len(ds.ref_y)
+    assert set(np.unique(ds.ref_y)) == set(range(ds.n_classes))
+
+
+def test_split_ratios():
+    ds = pad_like(samples_per_client=100)
+    s = split_client(ds.client_x[0], ds.client_y[0], seed=0)
+    total = len(s.train_y) + len(s.val_y) + len(s.test_y)
+    assert total == 100
+    assert len(s.train_y) == 80
+
+
+def test_sparsity_keeps_r_percent():
+    ds = pad_like(samples_per_client=200)
+    s = split_client(ds.client_x[0], ds.client_y[0], seed=0)
+    for r in (50, 10, 1):
+        sp = apply_sparsity(s, r, seed=1)
+        expect = max(2, round(len(s.train_y) * r / 100))
+        assert len(sp.train_y) == expect
+        # val/test untouched
+        assert len(sp.test_y) == len(s.test_y)
+
+
+def test_sliding_window_augment():
+    x = np.arange(40, dtype=np.float32).reshape(2, 20)
+    y = np.array([0, 1])
+    xa, ya = sliding_window_augment(x, y, window=8, stride=4)
+    assert xa.shape[1] == 8
+    assert len(xa) == len(ya) == 2 * 4
+
+
+def test_pack_cohort_pads_small_shards():
+    ds = pad_like(samples_per_client=50)
+    splits = make_splits(ds)
+    data = pack_cohort(splits[:4])
+    assert data["x"].shape[0] == 4
+    assert data["x"].shape[1] == data["y"].shape[1]
+
+
+def test_clusters_are_learnable_signal():
+    """Within-cluster messenger similarity should exceed across-cluster —
+    the property SQMD's graph exploits."""
+    ds = sc_like(samples_per_client=100)
+    same, diff = [], []
+    for i in range(0, 8):
+        for j in range(i + 1, 8):
+            xi = ds.client_x[i][:50].mean(0)
+            xj = ds.client_x[j][:50].mean(0)
+            d = float(np.linalg.norm(xi - xj))
+            (same if ds.client_cluster[i] == ds.client_cluster[j]
+             else diff).append(d)
+    assert np.mean(same) < np.mean(diff)
+
+
+def test_lm_stream_in_vocab():
+    toks = lm_token_stream(jax.random.key(0), 100, 5000)
+    t = np.asarray(toks)
+    assert t.min() >= 0 and t.max() < 100
+    assert len(np.unique(t)) > 30

@@ -1,0 +1,127 @@
+"""Integration tests: end-to-end federation behaviour (Algorithm 1)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (build_federation, evaluate, run_round, sqmd, isgd,
+                        fedmd, ddist, train_federation)
+from repro.data import make_splits, pad_like, sc_like
+from repro.models.mlp import hetero_mlp_zoo
+
+
+@pytest.fixture(scope="module")
+def setup():
+    ds = pad_like(samples_per_client=80, ref_size=60)
+    splits = make_splits(ds, seed=0)
+    zoo = hetero_mlp_zoo(ds.feature_len, ds.n_classes)
+    assignment = [list(zoo)[i % 3] for i in range(ds.n_clients)]
+    return ds, splits, zoo, assignment
+
+
+def test_federation_improves_over_init(setup):
+    ds, splits, zoo, assignment = setup
+    fed = build_federation(ds, splits, zoo, assignment,
+                           sqmd(q=12, k=4, rho=0.5), seed=1)
+    acc0 = evaluate(fed, splits).mean()
+    hist = train_federation(fed, splits, n_rounds=15, batch_size=16,
+                            eval_every=14)
+    assert hist.mean_acc[-1] > acc0 + 0.05
+
+
+def test_heterogeneous_cohorts_exist(setup):
+    ds, splits, zoo, assignment = setup
+    fed = build_federation(ds, splits, zoo, assignment, sqmd(), seed=1)
+    assert len(fed.cohorts) == 3
+    sizes = {c.family_name: c.n_clients for c in fed.cohorts}
+    assert sum(sizes.values()) == ds.n_clients
+    # different architectures => different param tree shapes
+    shapes = [tuple(x.shape for x in jax.tree.leaves(c.params))
+              for c in fed.cohorts]
+    assert len({len(s) for s in shapes}) > 1 or shapes[0] != shapes[1]
+
+
+@pytest.mark.parametrize("make_proto", [sqmd, fedmd,
+                                        lambda: ddist(k=4), isgd])
+def test_all_protocols_run(setup, make_proto):
+    ds, splits, zoo, assignment = setup
+    fed = build_federation(ds, splits, zoo, assignment, make_proto(), seed=2)
+    for rnd in range(3):
+        run_round(fed, rnd, batch_size=8)
+    acc = evaluate(fed, splits)
+    assert acc.shape == (ds.n_clients,)
+    assert np.isfinite(acc).all()
+
+
+def test_async_join_schedule(setup):
+    """Clients joining later must not train or pollute the graph before
+    their join round."""
+    ds, splits, zoo, assignment = setup
+    n = ds.n_clients
+    join = [0] * (n - 6) + [5] * 6          # last 6 clients join at round 5
+    fed = build_federation(ds, splits, zoo, assignment,
+                           sqmd(q=10, k=4, rho=0.5), seed=3,
+                           join_round=join)
+    late = np.array(fed.cohorts[0].client_ids)  # snapshot params of a late client
+    late_ids = [i for i in range(n) if join[i] == 5]
+    before = {c.family_name: jax.tree.map(lambda x: np.asarray(x).copy(),
+                                          c.params) for c in fed.cohorts}
+    for rnd in range(3):
+        run_round(fed, rnd, batch_size=8)
+    # late clients' params untouched during rounds 0-2
+    for c in fed.cohorts:
+        rows = [i for i, cid in enumerate(c.client_ids) if cid in late_ids]
+        for r in rows:
+            for a, b in zip(jax.tree.leaves(before[c.family_name]),
+                            jax.tree.leaves(c.params)):
+                np.testing.assert_allclose(np.asarray(a)[r],
+                                           np.asarray(b)[r], atol=1e-7)
+    # graph never selects un-joined clients as neighbors
+    w = np.asarray(fed.server.weights)
+    assert np.allclose(w[:, late_ids], 0.0)
+    # after joining they start moving
+    for rnd in range(5, 8):
+        run_round(fed, rnd, batch_size=8)
+    moved = False
+    for c in fed.cohorts:
+        rows = [i for i, cid in enumerate(c.client_ids) if cid in late_ids]
+        for r in rows:
+            for a, b in zip(jax.tree.leaves(before[c.family_name]),
+                            jax.tree.leaves(c.params)):
+                if np.abs(np.asarray(a)[r] - np.asarray(b)[r]).max() > 0:
+                    moved = True
+    assert moved
+
+
+def test_messengers_only_cross_cohorts(setup):
+    """Privacy contract: the server state contains no model parameters and
+    no raw training samples — only (N,R,C) soft decisions + scalars."""
+    ds, splits, zoo, assignment = setup
+    fed = build_federation(ds, splits, zoo, assignment, sqmd(), seed=4)
+    run_round(fed, 0, batch_size=8)
+    n, r, c = fed.server.repo_logp.shape
+    assert (n, r, c) == (ds.n_clients, len(ds.ref_y), ds.n_classes)
+    leaves = jax.tree.leaves(fed.server._asdict())
+    total_floats = sum(x.size for x in leaves)
+    # server state is O(N*R*C + N^2), strictly smaller than any cohort's
+    # parameter count
+    params_floats = sum(x.size for x in jax.tree.leaves(
+        fed.cohorts[-1].params))
+    assert total_floats < params_floats
+
+
+def test_checkpoint_roundtrip(tmp_path, setup):
+    from repro.checkpoint import restore_federation, save_federation
+    ds, splits, zoo, assignment = setup
+    fed = build_federation(ds, splits, zoo, assignment, sqmd(), seed=5)
+    for rnd in range(2):
+        run_round(fed, rnd, batch_size=8)
+    acc_before = evaluate(fed, splits)
+    save_federation(str(tmp_path), fed, step=2)
+
+    fed2 = build_federation(ds, splits, zoo, assignment, sqmd(), seed=99)
+    step = restore_federation(str(tmp_path), fed2)
+    assert step == 2
+    acc_after = evaluate(fed2, splits)
+    np.testing.assert_allclose(acc_before, acc_after, atol=1e-6)

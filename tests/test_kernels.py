@@ -1,0 +1,107 @@
+"""Per-kernel validation: Pallas (interpret=True) vs the pure-jnp oracle,
+swept over shapes and dtypes, plus analytic invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.pairwise_kl import pairwise_kl
+from repro.kernels.soft_ce import soft_ce
+from repro.kernels.neighbor_mean import neighbor_mean
+
+SHAPES = [(4, 8, 3), (7, 13, 5), (20, 100, 10), (32, 64, 2), (9, 50, 26)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _messengers(n, r, c, dtype, seed=0):
+    logits = jax.random.normal(jax.random.key(seed), (n, r, c)) * 2.0
+    return jax.nn.log_softmax(logits, -1).astype(dtype)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_pairwise_kl_matches_oracle(shape, dtype):
+    n, r, c = shape
+    logp = _messengers(n, r, c, dtype)
+    got = pairwise_kl(logp, bn=8, bm=8, bk=32, interpret=True)
+    want = ref.pairwise_kl_ref(logp)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=tol, rtol=tol)
+
+
+def test_pairwise_kl_invariants():
+    logp = _messengers(12, 30, 4, jnp.float32)
+    d = np.asarray(ref.pairwise_kl_ref(logp))
+    assert np.allclose(np.diag(d), 0.0, atol=1e-5)          # KL(p||p) = 0
+    assert (d > -1e-5).all()                                 # KL >= 0
+    # asymmetry: D is not symmetric in general
+    assert not np.allclose(d, d.T, atol=1e-4)
+
+
+def test_pairwise_kl_identical_clients():
+    logp = _messengers(1, 20, 5, jnp.float32)
+    stacked = jnp.tile(logp, (6, 1, 1))
+    d = np.asarray(pairwise_kl(stacked, bn=8, bm=8, bk=16, interpret=True))
+    assert np.allclose(d, 0.0, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_soft_ce_matches_oracle(shape, dtype):
+    n, r, c = shape
+    logits = (jax.random.normal(jax.random.key(1), (n, r, c)) * 3).astype(dtype)
+    labels = jax.random.randint(jax.random.key(2), (r,), 0, c)
+    got = soft_ce(logits, labels, bn=4, br=16, interpret=True)
+    want = ref.soft_ce_ref(logits, labels)
+    tol = 1e-4 if dtype == jnp.float32 else 0.3
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+def test_soft_ce_perfect_prediction_low_loss():
+    r, c = 40, 5
+    labels = jax.random.randint(jax.random.key(3), (r,), 0, c)
+    good = 10.0 * jax.nn.one_hot(labels, c)[None]            # confident right
+    bad = 10.0 * jax.nn.one_hot((labels + 1) % c, c)[None]   # confident wrong
+    g = np.asarray(ref.soft_ce_ref(jnp.concatenate([good, bad]), labels))
+    assert g[0] < g[1]
+    assert g[0] < 0.1 * r
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_neighbor_mean_matches_oracle(shape, dtype):
+    n, r, c = shape
+    probs = jnp.exp(_messengers(n, r, c, jnp.float32)).astype(dtype)
+    w = jax.random.uniform(jax.random.key(4), (n, n))
+    w = w / w.sum(1, keepdims=True)
+    got = neighbor_mean(w, probs, bn=8, bj=8, bk=32, interpret=True)
+    want = ref.neighbor_mean_ref(w, probs)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=tol, rtol=tol)
+
+
+def test_neighbor_mean_rows_are_distributions():
+    n, r, c = 10, 20, 4
+    probs = jnp.exp(_messengers(n, r, c, jnp.float32))
+    w = jnp.eye(n)  # self-selection -> identity
+    got = np.asarray(neighbor_mean(w, probs, bn=8, bj=8, bk=16,
+                                   interpret=True))
+    np.testing.assert_allclose(got, np.asarray(probs), atol=1e-5)
+    np.testing.assert_allclose(got.sum(-1), 1.0, atol=1e-4)
+
+
+def test_ops_dispatch_backends_agree():
+    logp = _messengers(8, 16, 4, jnp.float32)
+    labels = jax.random.randint(jax.random.key(5), (16,), 0, 4)
+    w = jnp.full((8, 8), 1.0 / 8)
+    for fn, args in [(ops.pairwise_kl, (logp,)),
+                     (ops.soft_ce, (logp, labels)),
+                     (ops.neighbor_mean, (w, jnp.exp(logp)))]:
+        a = fn(*args, backend="jnp")
+        b = fn(*args, backend="interpret")
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4, rtol=1e-4)

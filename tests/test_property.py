@@ -1,0 +1,102 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (candidate_mask, select_neighbors, similarity_matrix,
+                        divergence_matrix)
+from repro.core.distill import ref_loss
+from repro.kernels import ref
+
+_dims = st.tuples(st.integers(2, 12), st.integers(1, 20), st.integers(2, 8))
+
+
+@settings(max_examples=25, deadline=None)
+@given(_dims, st.integers(0, 2**31 - 1))
+def test_pairwise_kl_nonneg_zero_diag(dims, seed):
+    n, r, c = dims
+    z = jax.random.normal(jax.random.key(seed), (n, r, c)) * 3
+    logp = jax.nn.log_softmax(z, -1)
+    d = np.asarray(ref.pairwise_kl_ref(logp))
+    assert (d >= -1e-4).all()
+    assert np.allclose(np.diag(d), 0.0, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(_dims, st.integers(0, 2**31 - 1))
+def test_neighbor_mean_is_convex_combination(dims, seed):
+    """Targets stay inside the probability simplex (rows sum to 1, bounds
+    within min/max of inputs)."""
+    n, r, c = dims
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    probs = jax.nn.softmax(jax.random.normal(k1, (n, r, c)) * 2, -1)
+    w = jax.random.uniform(k2, (n, n)) + 1e-3
+    w = w / w.sum(1, keepdims=True)
+    t = np.asarray(ref.neighbor_mean_ref(w, probs))
+    np.testing.assert_allclose(t.sum(-1), 1.0, atol=1e-4)
+    assert (t >= np.asarray(probs).min(0) - 1e-5).all()
+    assert (t <= np.asarray(probs).max(0) + 1e-5).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 16), st.integers(1, 16), st.integers(0, 2**31 - 1))
+def test_candidate_mask_cardinality(n, q, seed):
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    quality = jax.random.uniform(k1, (n,)) * 10
+    active = jax.random.bernoulli(k2, 0.7, (n,))
+    m = np.asarray(candidate_mask(quality, active, q))
+    n_active = int(np.asarray(active).sum())
+    assert m.sum() == min(q, n_active)
+    assert not (m & ~np.asarray(active)).any()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(3, 10), st.integers(1, 4), st.integers(0, 2**31 - 1))
+def test_topk_neighbors_are_most_similar(n, k, seed):
+    k = min(k, n - 1)
+    z = jax.random.normal(jax.random.key(seed), (n, 10, 4)) * 2
+    logp = jax.nn.log_softmax(z, -1)
+    sim = similarity_matrix(divergence_matrix(logp, backend="jnp"))
+    g = select_neighbors(sim, jnp.ones((n,), bool), k)
+    s = np.asarray(sim)
+    for i in range(n):
+        chosen = set(np.asarray(g.neighbors[i]).tolist())
+        others = [j for j in range(n) if j != i and j not in chosen]
+        if others:
+            worst_chosen = min(s[i, j] for j in chosen)
+            best_other = max(s[i, j] for j in others)
+            assert worst_chosen >= best_other - 1e-5
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_ref_loss_zero_iff_targets_match(seed):
+    """Eq.5 is exactly 0 when targets equal own soft decisions, > 0 else."""
+    from repro.models.mlp import MLPConfig, init_mlp, apply_mlp
+    cfg = MLPConfig("t", 6, (8,), 3)
+    p = init_mlp(jax.random.key(seed), cfg)
+    ref_x = jax.random.normal(jax.random.key(seed + 1), (5, 6))
+    own = jax.nn.softmax(apply_mlp(cfg, p, ref_x), -1)
+    fn = lambda pp, x: apply_mlp(cfg, pp, x)
+    assert float(ref_loss(fn, p, ref_x, own)) < 1e-10
+    other = jnp.roll(own, 1, axis=-1)
+    assert float(ref_loss(fn, p, ref_x, other)) > 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 6), st.integers(0, 2**31 - 1))
+def test_optimizer_descends_quadratic(dim, seed):
+    from repro.optim import adam, sgd, apply_updates
+    target = jax.random.normal(jax.random.key(seed), (dim,))
+    params = {"w": jnp.zeros((dim,))}
+    for opt in (sgd(0.1), adam(0.1)):
+        p = params
+        s = opt.init(p)
+        loss = lambda q: jnp.sum((q["w"] - target) ** 2)
+        l0 = float(loss(p))
+        for _ in range(50):
+            g = jax.grad(loss)(p)
+            u, s = opt.update(g, s, p)
+            p = apply_updates(p, u)
+        assert float(loss(p)) < l0 * 0.5

@@ -1,0 +1,123 @@
+"""Sharding-rule unit tests on the host mesh + spec-shape consistency for
+every assigned arch on a FAKE 16x16 mesh built from abstract devices.
+
+These run in-process with the single CPU device: specs are pure metadata, so
+we validate divisibility logic without compiling (the real 512-device
+compile lives in launch/dryrun.py, exercised by the sweep)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import sharding as shard
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config, input_specs
+from repro.models.cache import init_cache
+from repro.models.transformer import abstract_params
+from repro.optim import adam
+
+
+class FakeMesh:
+    """Duck-typed mesh: only .shape / .axis_names / .size are consulted by
+    the spec rules."""
+    def __init__(self, shape_map):
+        self.shape = dict(shape_map)
+        self.axis_names = tuple(shape_map)
+        self.size = int(np.prod(list(shape_map.values())))
+
+
+MESH16 = FakeMesh({"data": 16, "model": 16})
+MESHPOD = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _check_divisible(leaf, spec, mesh):
+    for dim, axis in zip(leaf.shape, spec):
+        if axis is None:
+            continue
+        axes = axis if isinstance(axis, tuple) else (axis,)
+        total = 1
+        for a in axes:
+            total *= mesh.shape[a]
+        assert dim % total == 0, f"{leaf.shape} not divisible by {axis}"
+
+
+@pytest.mark.parametrize("aid", ARCH_IDS)
+@pytest.mark.parametrize("mesh", [MESH16, MESHPOD], ids=["16x16", "2x16x16"])
+def test_param_specs_divisible(aid, mesh):
+    cfg = get_config(aid)
+    params = abstract_params(cfg)
+    specs = shard.param_specs(params, cfg, mesh)
+    jax.tree.map(lambda l, s: _check_divisible(l, s, mesh), params, specs,
+                 is_leaf=lambda x: isinstance(x, P))
+
+
+@pytest.mark.parametrize("aid", ["deepseek-67b", "mixtral-8x7b",
+                                 "deepseek-v2-236b"])
+def test_big_arch_params_actually_sharded(aid):
+    """Most of a big arch's parameter bytes must carry a model-axis
+    annotation (tensor/expert parallelism engaged)."""
+    cfg = get_config(aid)
+    params = abstract_params(cfg)
+    specs = shard.param_specs(params, cfg, MESH16)
+    flat_p = jax.tree.leaves(params)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    sharded = sum(np.prod(l.shape) for l, s in zip(flat_p, flat_s)
+                  if any(a is not None for a in s))
+    total = sum(np.prod(l.shape) for l in flat_p)
+    assert sharded / total > 0.9, f"{aid}: only {sharded/total:.0%} sharded"
+
+
+def test_batch_specs_pod_axes():
+    batch = {"tokens": jax.ShapeDtypeStruct((256, 128), jnp.int32)}
+    s16 = shard.batch_specs(batch, MESH16)["tokens"]
+    assert s16 == P(("data",), None)
+    spod = shard.batch_specs(batch, MESHPOD)["tokens"]
+    assert spod == P(("pod", "data"), None)
+    # indivisible batch stays replicated
+    odd = {"x": jax.ShapeDtypeStruct((3, 8), jnp.float32)}
+    assert shard.batch_specs(odd, MESH16)["x"] == P(None, None)
+
+
+def test_cache_specs_long_context_shards_sequence():
+    cfg = get_config("gemma3-1b")
+    cache = jax.eval_shape(lambda: init_cache(cfg, 1, 524_288))
+    specs = shard.cache_specs(cache, cfg, MESH16)
+    # global layers: batch=1 -> sequence sharded over data
+    k_spec = specs["groups"]["pos5"]["k"]
+    assert k_spec == P(None, None, "data", None, None)
+    # local ring buffers (512 slots) stay unsharded in seq
+    k_local = specs["groups"]["pos0"]["k"]
+    assert k_local[2] is None
+
+
+def test_cache_specs_batched_decode_shards_batch():
+    cfg = get_config("stablelm-3b")
+    cache = jax.eval_shape(lambda: init_cache(cfg, 128, 32_768))
+    specs = shard.cache_specs(cache, cfg, MESH16)
+    assert specs["groups"]["pos0"]["k"][1] == "data"
+
+
+def test_opt_specs_mirror_params():
+    cfg = get_config("qwen2-0.5b")
+    params = abstract_params(cfg)
+    pspecs = shard.param_specs(params, cfg, MESH16)
+    opt = jax.eval_shape(adam(1e-4).init, params)
+    ospecs = shard.opt_specs(opt, pspecs)
+    assert ospecs.step == P()
+    flat_mu = jax.tree.leaves(ospecs.mu, is_leaf=lambda x: isinstance(x, P))
+    flat_p = jax.tree.leaves(pspecs, is_leaf=lambda x: isinstance(x, P))
+    assert flat_mu == flat_p
+
+
+def test_input_specs_cover_all_shapes():
+    for aid in ARCH_IDS:
+        cfg = get_config(aid)
+        for sh in INPUT_SHAPES.values():
+            specs = input_specs(cfg, sh)
+            if sh.kind == "decode":
+                assert specs["token"].shape == (sh.global_batch, 1)
+                assert "cache" in specs
+            else:
+                tot = specs["tokens"].shape[1] + (
+                    specs["embeds"].shape[1] if "embeds" in specs else 0)
+                assert tot == sh.seq_len
