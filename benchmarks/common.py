@@ -7,8 +7,8 @@ from typing import Dict, Optional
 
 import numpy as np
 
-from repro.core import (build_federation, ddist, fedmd, isgd, precision_recall,
-                        sqmd, train_federation)
+from repro.core import (FederationConfig, FederationEngine, ddist, fedmd,
+                        isgd, precision_recall, sqmd)
 from repro.data import fmnist_like, make_splits, pad_like, sc_like
 from repro.models.mlp import hetero_mlp_zoo
 
@@ -57,19 +57,24 @@ def make_protocols(h: Dict, include_ddist: bool = True):
 
 
 def run_protocol(ds, splits, proto, seed=1, n_rounds=None, join_round=None,
-                 eval_every=None):
+                 eval_every=None, schedule=None):
+    """Train one protocol through the FederationEngine; returns
+    (federation_state, history). ``proto`` is a Protocol/policy/name;
+    ``schedule`` any availability Schedule (join_round builds StagedJoin)."""
     import jax
     jax.clear_caches()   # long sweeps otherwise exhaust container RAM
     zoo = hetero_mlp_zoo(ds.feature_len, ds.n_classes)
     fams = list(zoo)
     # Table I heterogeneity ratios: ~N/3 clients per family
     assignment = [fams[i % 3] for i in range(ds.n_clients)]
-    fed = build_federation(ds, splits, zoo, assignment, proto, seed=seed,
-                           join_round=join_round)
-    n_rounds = n_rounds or N_ROUNDS
-    hist = train_federation(fed, splits, n_rounds=n_rounds, batch_size=BATCH,
-                            eval_every=eval_every or 5)
-    return fed, hist
+    engine = FederationEngine.build(
+        ds, splits, zoo, assignment, proto,
+        config=FederationConfig(rounds=n_rounds or N_ROUNDS,
+                                batch_size=BATCH,
+                                eval_every=eval_every or 5),
+        schedule=schedule, seed=seed, join_round=join_round)
+    hist = engine.fit(splits)
+    return engine.fed, hist
 
 
 def bench_row(name: str, us_per_call: float, derived: str) -> str:

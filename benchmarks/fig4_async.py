@@ -8,30 +8,27 @@ import time
 
 import numpy as np
 
-from benchmarks.common import HYPERS, N_ROUNDS, ensure_out, make_dataset
-from repro.core import build_federation, fedmd, sqmd, train_federation
-from repro.models.mlp import hetero_mlp_zoo
+from benchmarks.common import (HYPERS, N_ROUNDS, ensure_out, make_dataset,
+                               run_protocol)
+from repro.core import StagedJoin, fedmd, sqmd
 
 
 def run(verbose=True):
     h = HYPERS["sc_like"]
     ds, splits = make_dataset("sc_like", seed=0)
-    zoo = hetero_mlp_zoo(ds.feature_len, ds.n_classes)
-    fams = list(zoo)
     n = ds.n_clients
-    # facility = family: M1 joins at 0, M2 at T/3, M3 at 2T/3 (paper §IV-F)
-    assignment = [fams[i % 3] for i in range(n)]
-    stages = {fams[0]: 0, fams[1]: N_ROUNDS // 3, fams[2]: 2 * N_ROUNDS // 3}
-    join = [stages[assignment[i]] for i in range(n)]
-    m1 = np.asarray([assignment[i] == fams[0] for i in range(n)])
+    # facility = family index: M1 joins at 0, M2 at T/3, M3 at 2T/3
+    # (paper §IV-F) — expressed as a StagedJoin availability schedule
+    fam_of = [i % 3 for i in range(n)]
+    stages = {0: 0, 1: N_ROUNDS // 3, 2: 2 * N_ROUNDS // 3}
+    join = [stages[fam_of[i]] for i in range(n)]
+    m1 = np.asarray([fam_of[i] == 0 for i in range(n)])
 
-    out = {"stages": {k: int(v) for k, v in stages.items()}}
+    out = {"stages": {f"M{k + 1}": int(v) for k, v in stages.items()}}
     for proto in (sqmd(q=h["q"], k=h["k"], rho=h["rho"]),
                   fedmd(rho=h["rho"])):
-        fed = build_federation(ds, splits, zoo, assignment, proto, seed=1,
-                               join_round=join)
-        hist = train_federation(fed, splits, n_rounds=N_ROUNDS,
-                                batch_size=16, eval_every=5)
+        _, hist = run_protocol(ds, splits, proto, seed=1,
+                               schedule=StagedJoin(join))
         m1_acc = [float(a[m1].mean()) for a in hist.per_client_acc]
         out[proto.name] = {
             "rounds": hist.rounds,

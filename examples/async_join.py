@@ -1,15 +1,19 @@
 """Asynchronous staged-join scenario (paper §IV-F / Fig. 4).
 
 Three 'medical facilities' with different on-device architectures join the
-federation at different times. Watch: (a) newcomers are quality-filtered out
-of the candidate pool until they mature, (b) converged M1 clients keep their
-accuracy through each join under SQMD.
+federation at different times via a ``StagedJoin`` schedule. Watch: (a)
+newcomers are quality-filtered out of the candidate pool until they mature,
+(b) converged M1 clients keep their accuracy through each join under SQMD.
+
+Swap ``StagedJoin`` for ``RandomDropout``/``Straggler`` (or any registered
+schedule) to simulate other availability patterns — the engine is agnostic.
 
     PYTHONPATH=src python examples/async_join.py
 """
 import numpy as np
 
-from repro.core import build_federation, fedmd, sqmd, train_federation
+from repro.core import (FederationConfig, FederationEngine, StagedJoin,
+                        fedmd, sqmd)
 from repro.data import make_splits, sc_like
 from repro.models.mlp import hetero_mlp_zoo
 
@@ -24,14 +28,15 @@ def main():
     stage_of = {fams[0]: 0, fams[1]: rounds // 3, fams[2]: 2 * rounds // 3}
     join = [stage_of[a] for a in assignment]
     m1 = np.asarray([a == fams[0] for a in assignment])
+    config = FederationConfig(rounds=rounds, batch_size=16, eval_every=5)
 
-    for mk in (sqmd(q=16, k=8, rho=0.8), fedmd(rho=0.8)):
-        fed = build_federation(ds, splits, zoo, assignment, mk, seed=1,
-                               join_round=join)
-        hist = train_federation(fed, splits, n_rounds=rounds, batch_size=16,
-                                eval_every=5)
+    for proto in (sqmd(q=16, k=8, rho=0.8), fedmd(rho=0.8)):
+        engine = FederationEngine.build(ds, splits, zoo, assignment, proto,
+                                        config=config,
+                                        schedule=StagedJoin(join), seed=1)
+        hist = engine.fit(splits)
         m1_acc = [float(a[m1].mean()) for a in hist.per_client_acc]
-        print(f"\n== {mk.name} ==")
+        print(f"\n== {proto.name} ==")
         print("round    overall   M1-only   candidates")
         for i, rnd in enumerate(hist.rounds):
             ncand = (hist.graph_stats[i]["n_candidates"]

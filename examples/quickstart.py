@@ -1,15 +1,15 @@
-"""Quickstart: the SQMD protocol in ~60 lines with the public API.
+"""Quickstart: the SQMD protocol in ~50 lines with the public API.
 
-Builds a 12-client heterogeneous federation (3 MLP families) on a synthetic
-apnea-like dataset, trains 20 rounds with SQMD, and prints the accuracy plus
-the learned collaboration graph.
+Builds a 28-client heterogeneous federation (3 MLP families) on a synthetic
+apnea-like dataset, trains 25 rounds with the SQMD policy through the
+``FederationEngine``, and prints the accuracy plus the REAL collaboration
+graph the server last built.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import (build_federation, graph_stats, sqmd,
-                        train_federation, CollaborationGraph)
+from repro.core import FederationConfig, FederationEngine, graph_stats, sqmd
 from repro.data import make_splits, pad_like
 from repro.models.mlp import hetero_mlp_zoo
 
@@ -25,25 +25,25 @@ def main():
     zoo = hetero_mlp_zoo(ds.feature_len, ds.n_classes)
     assignment = [list(zoo)[i % 3] for i in range(ds.n_clients)]
 
-    # 3. the protocol: quality top-Q filter, similarity top-K neighbors,
-    #    distill with weight rho (paper Eq. 6)
-    protocol = sqmd(q=12, k=6, rho=0.8)
-
-    fed = build_federation(ds, splits, zoo, assignment, protocol, seed=1)
-    hist = train_federation(fed, splits, n_rounds=25, batch_size=16,
-                            eval_every=5, verbose=True)
+    # 3. the policy: quality top-Q filter, similarity top-K neighbors,
+    #    distill with weight rho (paper Eq. 6). Any registered policy name
+    #    or ServerPolicy instance drops in here unchanged.
+    engine = FederationEngine.build(
+        ds, splits, zoo, assignment, sqmd(q=12, k=6, rho=0.8),
+        config=FederationConfig(rounds=25, batch_size=16, eval_every=5,
+                                verbose=True),
+        seed=1)
+    hist = engine.fit(splits)
 
     print(f"\nfinal mean test accuracy: {hist.mean_acc[-1]:.4f}")
 
-    # 4. inspect the dynamic collaboration graph the server learned
-    import jax.numpy as jnp
-    g = CollaborationGraph(
-        neighbors=jnp.zeros((1, 1), jnp.int32), weights=fed.server.weights,
-        similarity=fed.server.sim, candidates=fed.server.active)
-    print("collaboration graph:", graph_stats(g))
+    # 4. inspect the dynamic collaboration graph the server learned — the
+    #    engine keeps the policy's actual last-built graph (true top-Q
+    #    candidate pool included, no placeholder reconstruction)
+    print("collaboration graph:", graph_stats(engine.last_graph))
 
     # how well did similarity recover the ground-truth clusters?
-    w = np.asarray(fed.server.weights)
+    w = np.asarray(engine.server.weights)
     cl = ds.client_cluster
     hit = [np.mean(cl[np.where(w[i] > 0)[0]] == cl[i])
            for i in range(ds.n_clients)]

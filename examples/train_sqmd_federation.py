@@ -1,7 +1,11 @@
 """End-to-end driver: full SQMD federation with the paper's OWN client
 architectures (ResNet-1D 8/20/50), checkpointing, protocol comparison, and
-per-round metrics — the 'train a ~100M-scale system for a few hundred steps'
-driver, scaled to this CPU container via the reduced-width ResNet-1D stack.
+per-round metrics through an engine callback — the 'train a ~100M-scale
+system for a few hundred steps' driver, scaled to this CPU container via
+the reduced-width ResNet-1D stack.
+
+Uses the ``FederationEngine`` API: the policy is looked up by name from
+the registry, so any ``@register_policy`` strategy works via --protocol.
 
     PYTHONPATH=src python examples/train_sqmd_federation.py \
         [--rounds 40] [--protocol sqmd|fedmd|ddist|isgd] [--resnet]
@@ -13,8 +17,8 @@ import time
 import numpy as np
 
 from repro.checkpoint import save_federation
-from repro.core import (build_federation, ddist, fedmd, isgd, sqmd,
-                        precision_recall, train_federation)
+from repro.core import (FederationConfig, FederationEngine, ddist, fedmd,
+                        isgd, precision_recall, sqmd)
 from repro.data import make_splits, sc_like
 from repro.models.mlp import hetero_mlp_zoo
 from repro.models.resnet import (RESNET8, RESNET20, RESNET50,
@@ -59,18 +63,26 @@ def main():
     proto = PROTOS[args.protocol]()
     print(f"protocol={proto.name} families={fams} "
           f"clients={ds.n_clients}")
-    fed = build_federation(ds, splits, zoo, assignment, proto, seed=1)
 
+    # per-eval metrics arrive through a round callback (no polling of the
+    # history between rounds)
     t0 = time.time()
-    hist = train_federation(fed, splits, n_rounds=args.rounds,
-                            batch_size=16, eval_every=5, verbose=True)
-    prec, rec = precision_recall(fed, splits, ds.n_classes)
+    log = lambda eng, rnd, m: print(
+        f"  [cb] round {rnd:4d}  acc={m['acc']:.4f}  "
+        f"val={m['val_acc']:.4f}  ({time.time()-t0:.0f}s)", flush=True)
+    engine = FederationEngine.build(
+        ds, splits, zoo, assignment, proto,
+        config=FederationConfig(rounds=args.rounds, batch_size=16,
+                                eval_every=5),
+        seed=1, callbacks=[log])
+    hist = engine.fit(splits)
+    prec, rec = precision_recall(engine.fed, splits, ds.n_classes)
     print(f"\n{proto.name}: acc={hist.mean_acc[-1]:.4f} "
           f"macro-pre={prec:.4f} macro-rec={rec:.4f} "
           f"({time.time()-t0:.0f}s)")
 
     os.makedirs(args.ckpt, exist_ok=True)
-    save_federation(args.ckpt, fed, step=args.rounds)
+    save_federation(args.ckpt, engine.fed, step=args.rounds)
     print(f"checkpoint -> {args.ckpt}/step_{args.rounds}.msgpack")
 
 

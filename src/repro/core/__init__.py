@@ -1,26 +1,43 @@
 """SQMD core — the paper's contribution as a composable JAX module."""
 from repro.core.distill import local_loss, ref_loss, sqmd_grads, sqmd_loss
-from repro.core.federation import (Federation, History, build_federation,
-                                   evaluate, precision_recall, run_round,
+from repro.core.engine import (Federation, FederationConfig,
+                               FederationEngine, History, evaluate,
+                               precision_recall)
+from repro.core.federation import (build_federation, run_round,
                                    train_federation)
 from repro.core.graph import (CollaborationGraph, ddist_graph, fedmd_graph,
                               graph_stats, select_neighbors)
 from repro.core.messenger import (cohort_messengers, make_messenger,
                                   messenger_bytes)
+from repro.core.policies import (DDistPolicy, FedMDPolicy, ISGDPolicy,
+                                 SQMDPolicy, ServerPolicy, as_policy,
+                                 get_policy, register_policy,
+                                 registered_policies)
 from repro.core.protocols import Protocol, ddist, fedmd, isgd, sqmd
 from repro.core.quality import candidate_mask, quality_scores
-from repro.core.server import (ServerState, init_server, server_round,
-                               upload_messengers)
+from repro.core.schedules import (AlwaysOn, RandomDropout, Schedule,
+                                  StagedJoin, Straggler, as_schedule,
+                                  get_schedule, register_schedule,
+                                  registered_schedules)
+from repro.core.server import (ServerState, init_server, policy_round,
+                               server_round, upload_messengers)
 from repro.core.similarity import divergence_matrix, similarity_matrix
 
 __all__ = [
     "local_loss", "ref_loss", "sqmd_grads", "sqmd_loss",
     "Federation", "History", "build_federation", "evaluate",
     "precision_recall", "run_round", "train_federation",
+    "FederationConfig", "FederationEngine",
     "CollaborationGraph", "ddist_graph", "fedmd_graph", "graph_stats",
     "select_neighbors", "cohort_messengers", "make_messenger",
     "messenger_bytes", "Protocol", "ddist", "fedmd", "isgd", "sqmd",
+    "ServerPolicy", "SQMDPolicy", "FedMDPolicy", "DDistPolicy",
+    "ISGDPolicy", "as_policy", "get_policy", "register_policy",
+    "registered_policies",
+    "Schedule", "AlwaysOn", "StagedJoin", "RandomDropout", "Straggler",
+    "as_schedule", "get_schedule", "register_schedule",
+    "registered_schedules",
     "candidate_mask", "quality_scores", "ServerState", "init_server",
-    "server_round", "upload_messengers", "divergence_matrix",
-    "similarity_matrix",
+    "policy_round", "server_round", "upload_messengers",
+    "divergence_matrix", "similarity_matrix",
 ]

@@ -1,186 +1,71 @@
-"""Federation orchestration: synchronous rounds + asynchronous staged joins
-(Algorithm 1 end-to-end, RQ4's simulation protocol).
+"""Legacy federation API — thin deprecation shims over the engine.
 
-The driver owns: cohorts (hetero model families), the server state, the
-reference set, the protocol, and a join schedule. Each round:
+The free-function driver (``build_federation`` / ``run_round`` /
+``train_federation``) predates the config-driven ``FederationEngine``
+(``repro.core.engine``). These wrappers keep old call sites working and
+forward everything to the engine; new code should use::
 
-  1. every ACTIVE client takes ``local_steps`` SGD steps on its private
-     shard (+ rho-weighted distillation toward its current targets),
-  2. every ``protocol.interval`` rounds, active clients upload messengers,
-     the server re-grades / rebuilds the graph / re-emits targets.
-
-Metrics land in ``History`` (per-round mean test accuracy, per-client
-accuracy, graph stats) — the benchmarks read these to reproduce the paper's
-tables/figures.
+    engine = FederationEngine.build(ds, splits, zoo, assignment, sqmd(),
+                                    config=FederationConfig(rounds=40))
+    history = engine.fit(splits)
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+import warnings
+from typing import Callable, Dict, Optional, Sequence, Tuple
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import graph as graph_mod
-from repro.core.client import (Cohort, cohort_accuracy, cohort_messenger_upload,
-                               cohort_step, make_cohort)
+from repro.core.engine import (Federation, FederationConfig,
+                               FederationEngine, History, evaluate,
+                               precision_recall)
 from repro.core.protocols import Protocol
-from repro.core.server import (ServerState, init_server, server_round,
-                               upload_messengers)
-from repro.data.pipeline import cohort_batch
-from repro.data.partition import ClientSplit, pack_cohort
+from repro.core.schedules import StagedJoin
+from repro.data.partition import ClientSplit
 from repro.data.synthetic import FederatedDataset
-from repro.optim import Optimizer, sgd
+from repro.optim import Optimizer
+
+__all__ = ["Federation", "History", "build_federation", "run_round",
+           "train_federation", "evaluate", "precision_recall"]
 
 
-@dataclasses.dataclass
-class History:
-    rounds: List[int] = dataclasses.field(default_factory=list)
-    mean_acc: List[float] = dataclasses.field(default_factory=list)
-    per_client_acc: List[np.ndarray] = dataclasses.field(default_factory=list)
-    val_acc: List[float] = dataclasses.field(default_factory=list)
-    graph_stats: List[dict] = dataclasses.field(default_factory=list)
-    mean_loss: List[float] = dataclasses.field(default_factory=list)
-
-    def final_metrics(self, mask: Optional[np.ndarray] = None) -> dict:
-        acc = self.per_client_acc[-1]
-        if mask is not None:
-            acc = acc[mask]
-        return {"acc": float(np.mean(acc)), "std": float(np.std(acc))}
-
-    @property
-    def best_round_idx(self) -> int:
-        """Model selection by VALIDATION accuracy (test stays untouched)."""
-        if self.val_acc:
-            return int(np.argmax(self.val_acc))
-        return len(self.mean_acc) - 1
-
-    @property
-    def selected_acc(self) -> float:
-        return self.mean_acc[self.best_round_idx]
-
-    def selected_per_client(self) -> np.ndarray:
-        return self.per_client_acc[self.best_round_idx]
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(f"repro.core.{old} is deprecated; use {new}",
+                  DeprecationWarning, stacklevel=3)
 
 
-@dataclasses.dataclass
-class Federation:
-    cohorts: List[Cohort]
-    server: ServerState
-    protocol: Protocol
-    ref_x: jnp.ndarray
-    ref_y: jnp.ndarray
-    optimizer: Optimizer
-    n_clients: int
-    static_weights: Optional[jnp.ndarray] = None   # ddist graph
-    join_round: Optional[np.ndarray] = None        # (N,) async schedule
-    targets: Optional[jnp.ndarray] = None          # (N,R,C)
-    history: History = dataclasses.field(default_factory=History)
-    rng: Any = None
-
-    def client_rows(self, cohort: Cohort) -> np.ndarray:
-        return cohort.client_ids
+def _engine(fed: Federation, batch_size: int, local_steps: int,
+            backend: Optional[str], rounds: int = 0, eval_every: int = 10,
+            verbose: bool = False) -> FederationEngine:
+    """Ephemeral engine view over a legacy Federation (policy resolved from
+    ``fed.protocol``, schedule from ``fed.join_round``)."""
+    cfg = FederationConfig(rounds=rounds, batch_size=batch_size,
+                           local_steps=local_steps, eval_every=eval_every,
+                           backend=backend, verbose=verbose)
+    return FederationEngine(fed, config=cfg)
 
 
 def build_federation(ds: FederatedDataset, splits: Sequence[ClientSplit],
                      families: Dict[str, Tuple[Callable, Callable]],
                      assignment: Sequence[str], protocol: Protocol,
                      optimizer: Optional[Optimizer] = None, seed: int = 0,
-                     join_round: Optional[Sequence[int]] = None) -> Federation:
-    """families: {name: (init_fn, apply_fn)}; assignment[n] = family of
-    client n (the paper's Table-I #ResNet8/20/50 ratios)."""
-    optimizer = optimizer or sgd(0.05, momentum=0.9)
-    key = jax.random.key(seed)
-    n = ds.n_clients
-    assert len(assignment) == n
-    cohorts = []
-    for fam, (init_fn, apply_fn) in families.items():
-        ids = [i for i in range(n) if assignment[i] == fam]
-        if not ids:
-            continue
-        key, sub = jax.random.split(key)
-        data = pack_cohort([splits[i] for i in ids])
-        data = {k: jnp.asarray(v) for k, v in data.items()}
-        cohorts.append(make_cohort(fam, init_fn, apply_fn, optimizer,
-                                   ids, data, sub))
-    server = init_server(n, len(ds.ref_y), ds.n_classes)
-    jr = None
-    if join_round is not None:
-        jr = np.asarray(join_round)
-    static_w = None
-    if protocol.name == "ddist":
-        key, sub = jax.random.split(key)
-        static_w = graph_mod.ddist_graph(sub, n, protocol.k).weights
-    return Federation(
-        cohorts=cohorts, server=server, protocol=protocol,
-        ref_x=jnp.asarray(ds.ref_x), ref_y=jnp.asarray(ds.ref_y),
-        optimizer=optimizer, n_clients=n, static_weights=static_w,
-        join_round=jr, rng=key)
-
-
-def _active_mask(fed: Federation, rnd: int) -> np.ndarray:
-    if fed.join_round is None:
-        return np.ones(fed.n_clients, bool)
-    return fed.join_round <= rnd
+                     join_round: Optional[Sequence[int]] = None
+                     ) -> Federation:
+    """Deprecated: use ``FederationEngine.build`` (returns the engine; its
+    ``.fed`` is this function's return value)."""
+    _deprecated("build_federation", "FederationEngine.build")
+    schedule = StagedJoin(join_round) if join_round is not None else None
+    engine = FederationEngine.build(ds, splits, families, assignment,
+                                    protocol, schedule=schedule,
+                                    optimizer=optimizer, seed=seed)
+    return engine.fed
 
 
 def run_round(fed: Federation, rnd: int, batch_size: int = 32,
               local_steps: int = 1, backend: Optional[str] = None) -> None:
-    """One federation round, in place."""
-    proto = fed.protocol
-    n, r, c = fed.server.repo_logp.shape
-    active_np = _active_mask(fed, rnd)
-    active = jnp.asarray(active_np)
-
-    if fed.targets is None:
-        fed.targets = jnp.full((n, r, c), 1.0 / c, jnp.float32)
-
-    # --- local steps (line 12) ---
-    use_ref = proto.uses_reference and rnd > 0
-    for _ in range(local_steps):
-        for coh in fed.cohorts:
-            fed.rng, sub = jax.random.split(fed.rng)
-            batch = cohort_batch(sub, coh.data, batch_size)
-            rows = jnp.asarray(coh.client_ids)
-            tgt = fed.targets[rows]
-            trainable = active[rows]
-            coh.params, coh.opt_state, _ = cohort_step(
-                coh.apply_fn, fed.optimizer, coh.params, coh.opt_state,
-                batch["x"], batch["y"], fed.ref_x, tgt, trainable,
-                proto.rho, use_ref)
-
-    # --- communication step (lines 5-10) ---
-    if proto.uses_reference and rnd % proto.interval == 0:
-        msg = jnp.zeros((n, r, c), jnp.float32)
-        for coh in fed.cohorts:
-            m = cohort_messenger_upload(coh.apply_fn, coh.params, fed.ref_x)
-            msg = msg.at[jnp.asarray(coh.client_ids)].set(m)
-        fed.server = upload_messengers(fed.server, msg, active)
-        fed.server, fed.targets = server_round(
-            fed.server, proto, fed.ref_y,
-            static_weights=fed.static_weights, backend=backend)
-    else:
-        fed.server = fed.server._replace(active=fed.server.active | active,
-                                         round=fed.server.round + 1)
-
-
-def evaluate(fed: Federation, splits: Sequence[ClientSplit],
-             which: str = "test") -> np.ndarray:
-    """Per-client accuracy (N,) on the requested split."""
-    accs = np.zeros(fed.n_clients)
-    for coh in fed.cohorts:
-        xs = np.stack([getattr(splits[i], f"{which}_x")[
-            :min(len(getattr(splits[j], f"{which}_y"))
-                 for j in coh.client_ids)]
-            for i in coh.client_ids])
-        ys = np.stack([getattr(splits[i], f"{which}_y")[:xs.shape[1]]
-                       for i in coh.client_ids])
-        a = cohort_accuracy(coh.apply_fn, coh.params, jnp.asarray(xs),
-                            jnp.asarray(ys))
-        accs[coh.client_ids] = np.asarray(a)
-    return accs
+    """Deprecated: use ``FederationEngine.run_round``. One round, in
+    place."""
+    _deprecated("run_round", "FederationEngine.run_round")
+    _engine(fed, batch_size, local_steps, backend,
+            rounds=rnd + 1).run_round(rnd)
 
 
 def train_federation(fed: Federation, splits: Sequence[ClientSplit],
@@ -188,45 +73,8 @@ def train_federation(fed: Federation, splits: Sequence[ClientSplit],
                      local_steps: int = 1, eval_every: int = 10,
                      backend: Optional[str] = None,
                      verbose: bool = False) -> History:
-    for rnd in range(n_rounds):
-        run_round(fed, rnd, batch_size, local_steps, backend=backend)
-        if rnd % eval_every == 0 or rnd == n_rounds - 1:
-            acc = evaluate(fed, splits)
-            vacc = evaluate(fed, splits, which="val")
-            mask = _active_mask(fed, rnd)
-            fed.history.rounds.append(rnd)
-            fed.history.per_client_acc.append(acc)
-            fed.history.mean_acc.append(float(acc[mask].mean()))
-            fed.history.val_acc.append(float(vacc[mask].mean()))
-            if fed.protocol.name == "sqmd":
-                cg = graph_mod.CollaborationGraph(
-                    neighbors=jnp.zeros((1, 1), jnp.int32),
-                    weights=fed.server.weights,
-                    similarity=fed.server.sim,
-                    candidates=fed.server.active)
-                fed.history.graph_stats.append(graph_mod.graph_stats(cg))
-            if verbose:
-                print(f"  round {rnd:4d}  acc={fed.history.mean_acc[-1]:.4f}")
-    return fed.history
-
-
-def precision_recall(fed: Federation, splits: Sequence[ClientSplit],
-                     n_classes: int) -> Tuple[float, float]:
-    """Macro precision/recall over all clients' test shards (Table III)."""
-    from repro.core.client import cohort_pred
-    tp = np.zeros(n_classes)
-    fp = np.zeros(n_classes)
-    fn = np.zeros(n_classes)
-    for coh in fed.cohorts:
-        m = min(len(splits[i].test_y) for i in coh.client_ids)
-        xs = np.stack([splits[i].test_x[:m] for i in coh.client_ids])
-        ys = np.stack([splits[i].test_y[:m] for i in coh.client_ids])
-        pred = np.asarray(cohort_pred(coh.apply_fn, coh.params,
-                                      jnp.asarray(xs)))
-        for c in range(n_classes):
-            tp[c] += np.sum((pred == c) & (ys == c))
-            fp[c] += np.sum((pred == c) & (ys != c))
-            fn[c] += np.sum((pred != c) & (ys == c))
-    prec = np.mean(tp / np.maximum(tp + fp, 1))
-    rec = np.mean(tp / np.maximum(tp + fn, 1))
-    return float(prec), float(rec)
+    """Deprecated: use ``FederationEngine.fit``."""
+    _deprecated("train_federation", "FederationEngine.fit")
+    engine = _engine(fed, batch_size, local_steps, backend, rounds=n_rounds,
+                     eval_every=eval_every, verbose=verbose)
+    return engine.fit(splits)

@@ -1,0 +1,20 @@
+"""Pluggable server-side collaboration policies.
+
+Importing this package registers the four paper protocols (§IV-A):
+``sqmd``, ``fedmd``, ``ddist``, ``isgd``. Third-party policies register
+themselves with ``@register_policy("name")`` and immediately work with
+``Protocol``, ``server_round``, and the ``FederationEngine``.
+"""
+from repro.core.policies.base import (ServerPolicy, as_policy, get_policy,
+                                      is_registered, register_policy,
+                                      registered_policies, unregister_policy)
+from repro.core.policies.ddist import DDistPolicy
+from repro.core.policies.fedmd import FedMDPolicy
+from repro.core.policies.isgd import ISGDPolicy
+from repro.core.policies.sqmd import SQMDPolicy
+
+__all__ = [
+    "ServerPolicy", "as_policy", "get_policy", "is_registered",
+    "register_policy", "registered_policies", "unregister_policy",
+    "SQMDPolicy", "FedMDPolicy", "DDistPolicy", "ISGDPolicy",
+]

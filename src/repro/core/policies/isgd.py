@@ -1,0 +1,26 @@
+"""I-SGD baseline: isolated local SGD — no collaboration, zero targets."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core import graph as graph_mod
+from repro.core.policies.base import ServerPolicy, register_policy
+
+
+@register_policy("isgd")
+class ISGDPolicy(ServerPolicy):
+    """Empty graph; the engine skips the communication step entirely
+    (``uses_reference`` False), but a direct ``server_round`` still yields
+    well-defined all-zero targets."""
+
+    uses_reference = False
+
+    def build_graph(self, state, quality: jnp.ndarray, *,
+                    backend: Optional[str] = None):
+        n = state.active.shape[0]
+        return graph_mod.CollaborationGraph(
+            neighbors=jnp.zeros((n, 0), jnp.int32),
+            weights=jnp.zeros_like(state.weights),
+            similarity=state.sim, candidates=state.active)

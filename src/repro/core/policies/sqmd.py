@@ -1,0 +1,27 @@
+"""SQMD — the paper's protocol: quality top-Q filter, then similarity
+top-K neighbors on the dynamic directed graph (Defs. 3-5, Algorithm 1)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core import graph as graph_mod
+from repro.core import quality as quality_mod
+from repro.core import similarity as sim_mod
+from repro.core.policies.base import ServerPolicy, register_policy
+
+
+@register_policy("sqmd")
+class SQMDPolicy(ServerPolicy):
+    """Top-Q candidate pool by grade, top-K most-similar neighbors each."""
+
+    computes_similarity = True
+
+    def build_graph(self, state, quality: jnp.ndarray, *,
+                    backend: Optional[str] = None):
+        cand = quality_mod.candidate_mask(quality, state.active,
+                                          self.protocol.q)
+        div = sim_mod.divergence_matrix(state.repo_logp, backend=backend)
+        sim = sim_mod.similarity_matrix(div)
+        return graph_mod.select_neighbors(sim, cand, self.protocol.k)

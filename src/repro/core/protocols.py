@@ -16,19 +16,31 @@ from typing import Optional
 
 @dataclasses.dataclass(frozen=True)
 class Protocol:
-    name: str                    # sqmd | fedmd | ddist | isgd
+    name: str                    # any registered policy (sqmd | fedmd | ...)
     rho: float = 0.8             # Eq. 6 trade-off
     q: int = 16                  # quality pool size (sqmd)
     k: int = 8                   # neighbors (sqmd / ddist)
     interval: int = 1            # communication interval I (Alg. 1)
 
     def __post_init__(self):
-        assert self.name in ("sqmd", "fedmd", "ddist", "isgd"), self.name
-        assert 0.0 <= self.rho <= 1.0
+        # ValueError (not assert) so invalid configs fail under python -O too
+        from repro.core.policies import is_registered, registered_policies
+        if not is_registered(self.name):
+            raise ValueError(f"unknown protocol {self.name!r}; registered "
+                             f"policies: {registered_policies()}")
+        if not 0.0 <= self.rho <= 1.0:
+            raise ValueError(f"rho must be in [0, 1], got {self.rho}")
+        if self.q < 1:
+            raise ValueError(f"q must be >= 1, got {self.q}")
+        if self.k < 1:
+            raise ValueError(f"k must be >= 1, got {self.k}")
+        if self.interval < 1:
+            raise ValueError(f"interval must be >= 1, got {self.interval}")
 
     @property
     def uses_reference(self) -> bool:
-        return self.name != "isgd"
+        from repro.core.policies import get_policy
+        return get_policy(self.name).uses_reference
 
 
 def sqmd(q: int = 16, k: int = 8, rho: float = 0.8,

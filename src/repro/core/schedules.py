@@ -1,0 +1,171 @@
+"""Client-availability schedules (the engine's simulation of RQ4-style
+scenarios).
+
+A ``Schedule`` answers two questions per round:
+
+  available(rnd, n) -> (n,) bool   who trains & uploads THIS round
+  joined(rnd, n)    -> (n,) bool   who is a member by now (monotone; used
+                                   for eval averaging)
+
+Clients outside ``available`` keep their stale repository row — exactly
+the paper's asynchronous semantics — and their params/optimizer state are
+frozen for the round. Schedules are deterministic functions of (seed,
+round) so runs are reproducible and restartable.
+
+Like policies, schedules are registry-pluggable: a new client-arrival
+pattern is a ~15-line ``@register_schedule`` class, no engine changes.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Dict, Optional, Sequence, Tuple, Type, Union
+
+import numpy as np
+
+_REGISTRY: Dict[str, Type["Schedule"]] = {}
+
+
+def register_schedule(name: str):
+    def deco(cls: Type["Schedule"]) -> Type["Schedule"]:
+        if name in _REGISTRY:
+            raise ValueError(f"schedule {name!r} already registered")
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def registered_schedules() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_schedule(name: str) -> Type["Schedule"]:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown schedule {name!r}; registered: "
+                       f"{registered_schedules()}") from None
+
+
+class Schedule(abc.ABC):
+    name: str = "?"
+
+    @abc.abstractmethod
+    def available(self, rnd: int, n_clients: int) -> np.ndarray:
+        """(n,) bool — clients that participate in round ``rnd``."""
+
+    def joined(self, rnd: int, n_clients: int) -> np.ndarray:
+        """(n,) bool — federation members as of round ``rnd``. Default:
+        same as availability (correct for monotone schedules)."""
+        return self.available(rnd, n_clients)
+
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}()"
+
+
+@register_schedule("always-on")
+class AlwaysOn(Schedule):
+    """Every client participates every round (the synchronous baseline)."""
+
+    def available(self, rnd: int, n_clients: int) -> np.ndarray:
+        return np.ones(n_clients, bool)
+
+
+@register_schedule("staged-join")
+class StagedJoin(Schedule):
+    """Client n joins at ``join_round[n]`` and stays — the paper's §IV-F
+    asynchronous staged-facility scenario."""
+
+    def __init__(self, join_round: Sequence[int]):
+        self.join_round = np.asarray(join_round)
+
+    def available(self, rnd: int, n_clients: int) -> np.ndarray:
+        if self.join_round.shape[0] != n_clients:
+            raise ValueError(f"join_round has {self.join_round.shape[0]} "
+                             f"entries for {n_clients} clients")
+        return self.join_round <= rnd
+
+    def __repr__(self) -> str:
+        return f"StagedJoin(stages={sorted(set(self.join_round.tolist()))})"
+
+
+@register_schedule("dropout")
+class RandomDropout(Schedule):
+    """IoT reality: each joined client independently misses a round with
+    probability ``p`` (device offline / battery / connectivity). Composable
+    over a base schedule, e.g. ``RandomDropout(0.3, base=StagedJoin(...))``.
+
+    At least one joined client is always kept so every round makes
+    progress."""
+
+    def __init__(self, p: float = 0.2, seed: int = 0,
+                 base: Optional[Schedule] = None):
+        if not 0.0 <= p < 1.0:
+            raise ValueError(f"dropout p must be in [0, 1), got {p}")
+        self.p = p
+        self.seed = seed
+        self.base = base or AlwaysOn()
+
+    def available(self, rnd: int, n_clients: int) -> np.ndarray:
+        joined = self.base.available(rnd, n_clients)
+        rng = np.random.default_rng((self.seed, rnd))
+        up = rng.random(n_clients) >= self.p
+        if joined.any() and not (up & joined).any():
+            up[int(np.argmax(joined))] = True
+        return up & joined
+
+    def joined(self, rnd: int, n_clients: int) -> np.ndarray:
+        return self.base.joined(rnd, n_clients)
+
+    def __repr__(self) -> str:
+        return f"RandomDropout(p={self.p}, base={self.base!r})"
+
+
+@register_schedule("straggler")
+class Straggler(Schedule):
+    """A fixed random ``fraction`` of clients is slow hardware: stragglers
+    only complete a round every ``period`` rounds (uploading fresh
+    messengers then; stale in between)."""
+
+    def __init__(self, fraction: float = 0.3, period: int = 3, seed: int = 0,
+                 base: Optional[Schedule] = None):
+        if not 0.0 <= fraction <= 1.0:
+            raise ValueError(f"fraction must be in [0, 1], got {fraction}")
+        if period < 1:
+            raise ValueError(f"period must be >= 1, got {period}")
+        self.fraction = fraction
+        self.period = period
+        self.seed = seed
+        self.base = base or AlwaysOn()
+
+    def slow_mask(self, n_clients: int) -> np.ndarray:
+        rng = np.random.default_rng(self.seed)
+        k = int(round(self.fraction * n_clients))
+        slow = np.zeros(n_clients, bool)
+        slow[rng.choice(n_clients, size=k, replace=False)] = True
+        return slow
+
+    def available(self, rnd: int, n_clients: int) -> np.ndarray:
+        ok = ~self.slow_mask(n_clients) | (rnd % self.period == 0)
+        return ok & self.base.available(rnd, n_clients)
+
+    def joined(self, rnd: int, n_clients: int) -> np.ndarray:
+        return self.base.joined(rnd, n_clients)
+
+    def __repr__(self) -> str:
+        return (f"Straggler(fraction={self.fraction}, "
+                f"period={self.period}, base={self.base!r})")
+
+
+def as_schedule(schedule: Union[None, str, Schedule],
+                join_round=None) -> Schedule:
+    """Coerce None/name/instance into a Schedule; ``join_round`` (legacy
+    array argument) wins when no explicit schedule is given."""
+    if isinstance(schedule, Schedule):
+        return schedule
+    if isinstance(schedule, str):
+        return get_schedule(schedule)()
+    if join_round is not None:
+        return StagedJoin(join_round)
+    return AlwaysOn()

@@ -14,16 +14,12 @@ returns the per-client distillation targets (the K^n payloads).
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional, Tuple, Union
 
-import jax
 import jax.numpy as jnp
 
-from repro.core import graph as graph_mod
 from repro.core import quality as quality_mod
-from repro.core import similarity as sim_mod
 from repro.core.protocols import Protocol
-from repro.kernels import ops
 
 
 class ServerState(NamedTuple):
@@ -62,39 +58,32 @@ def upload_messengers(state: ServerState, messengers_logp: jnp.ndarray,
     return state._replace(repo_logp=repo, active=state.active | uploaded)
 
 
-def server_round(state: ServerState, protocol: Protocol,
+def policy_round(state: ServerState, policy, ref_labels: jnp.ndarray,
+                 backend: Optional[str] = None):
+    """Lines 7–10, policy-agnostic: grade -> build graph -> emit targets.
+
+    ``policy`` is a resolved ServerPolicy instance. Returns
+    (new_state, targets (N,R,C) fp32, CollaborationGraph) — the graph is
+    what the engine's metrics/graph-stats read."""
+    g = policy.grade(state, ref_labels, backend=backend)
+    graph = policy.build_graph(state, g, backend=backend)
+    targets = policy.emit_targets(state, graph, backend=backend)
+    return policy.update_state(state, g, graph), targets, graph
+
+
+def server_round(state: ServerState, protocol: Union[Protocol, "ServerPolicy",
+                                                     str],
                  ref_labels: jnp.ndarray,
                  static_weights: Optional[jnp.ndarray] = None,
                  backend: Optional[str] = None
                  ) -> Tuple[ServerState, jnp.ndarray]:
-    """Lines 7–10: grade, filter top-Q, similarity top-K, emit targets.
+    """Lines 7–10: one server round under any registered policy.
 
-    Returns (new_state, targets (N,R,C) fp32 probability targets).
-    For "ddist" pass the static graph's ``static_weights``."""
-    repo = state.repo_logp
-    g = quality_mod.quality_scores(repo, ref_labels, backend=backend)
-
-    if protocol.name == "sqmd":
-        cand = quality_mod.candidate_mask(g, state.active, protocol.q)
-        div = sim_mod.divergence_matrix(repo, backend=backend)
-        sim = sim_mod.similarity_matrix(div)
-        cg = graph_mod.select_neighbors(sim, cand, protocol.k)
-        weights = cg.weights
-    elif protocol.name == "fedmd":
-        cg = graph_mod.fedmd_graph(state.active)
-        weights, sim = cg.weights, state.sim
-    elif protocol.name == "ddist":
-        assert static_weights is not None, "ddist needs its static graph"
-        # mask columns of clients that never joined
-        weights = static_weights * state.active[None, :].astype(jnp.float32)
-        weights = weights / jnp.maximum(weights.sum(1, keepdims=True), 1e-9)
-        sim = state.sim
-    else:  # isgd: no targets
-        weights = jnp.zeros_like(state.weights)
-        sim = state.sim
-
-    probs = jnp.exp(repo)
-    targets = ops.neighbor_mean(weights, probs, backend=backend)
-    new = state._replace(quality=g, sim=sim, weights=weights,
-                         round=state.round + 1)
+    ``protocol`` may be a Protocol config, a registered policy name, or a
+    ServerPolicy instance. Returns (new_state, targets (N,R,C) fp32).
+    For "ddist" pass the static graph's ``static_weights`` (or use a
+    pre-``setup`` DDistPolicy instance)."""
+    from repro.core.policies import as_policy
+    pol = as_policy(protocol, static_weights=static_weights)
+    new, targets, _ = policy_round(state, pol, ref_labels, backend=backend)
     return new, targets

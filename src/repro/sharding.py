@@ -253,6 +253,8 @@ def cache_specs(cache: Any, cfg: ModelConfig, mesh: Mesh,
     for a in ba:
         total *= _axis_size(mesh, a)
     dsz = _axis_size(mesh, "data")
+    if len(ba) == 1:
+        ba = ba[0]   # canonical spelling: P("data", ...) not P(("data",), ...)
 
     def spec(path, leaf):
         p = _path_str(path)

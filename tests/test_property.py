@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip cleanly if absent
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (candidate_mask, select_neighbors, similarity_matrix,
                         divergence_matrix)
