@@ -56,6 +56,13 @@ def make_protocols(h: Dict, include_ddist: bool = True):
     return ps
 
 
+def _table1_assignment(ds):
+    zoo = hetero_mlp_zoo(ds.feature_len, ds.n_classes)
+    fams = list(zoo)
+    # Table I heterogeneity ratios: ~N/3 clients per family
+    return zoo, [fams[i % 3] for i in range(ds.n_clients)]
+
+
 def run_protocol(ds, splits, proto, seed=1, n_rounds=None, join_round=None,
                  eval_every=None, schedule=None):
     """Train one protocol through the FederationEngine; returns
@@ -63,10 +70,7 @@ def run_protocol(ds, splits, proto, seed=1, n_rounds=None, join_round=None,
     ``schedule`` any availability Schedule (join_round builds StagedJoin)."""
     import jax
     jax.clear_caches()   # long sweeps otherwise exhaust container RAM
-    zoo = hetero_mlp_zoo(ds.feature_len, ds.n_classes)
-    fams = list(zoo)
-    # Table I heterogeneity ratios: ~N/3 clients per family
-    assignment = [fams[i % 3] for i in range(ds.n_clients)]
+    zoo, assignment = _table1_assignment(ds)
     engine = FederationEngine.build(
         ds, splits, zoo, assignment, proto,
         config=FederationConfig(rounds=n_rounds or N_ROUNDS,
@@ -75,6 +79,27 @@ def run_protocol(ds, splits, proto, seed=1, n_rounds=None, join_round=None,
         schedule=schedule, seed=seed, join_round=join_round)
     hist = engine.fit(splits)
     return engine.fed, hist
+
+
+def run_protocol_async(ds, splits, proto, arrivals, trigger=None, until=None,
+                       seed=1, n_rounds=None, eval_every=None):
+    """Train one protocol through the event-driven AsyncFederationEngine;
+    returns (engine, history). ``arrivals`` is any ArrivalProcess (or a
+    mask Schedule, shimmed); ``trigger`` a server Trigger or name."""
+    import jax
+
+    from repro.core import AsyncFederationEngine
+    jax.clear_caches()
+    zoo, assignment = _table1_assignment(ds)
+    engine = AsyncFederationEngine.build(
+        ds, splits, zoo, assignment, proto, arrivals=arrivals,
+        trigger=trigger,
+        config=FederationConfig(rounds=n_rounds or N_ROUNDS,
+                                batch_size=BATCH,
+                                eval_every=eval_every or 5),
+        seed=seed)
+    hist = engine.fit(splits, until=until)
+    return engine, hist
 
 
 def bench_row(name: str, us_per_call: float, derived: str) -> str:

@@ -1,8 +1,8 @@
 """SQMD core — the paper's contribution as a composable JAX module."""
 from repro.core.distill import local_loss, ref_loss, sqmd_grads, sqmd_loss
-from repro.core.engine import (Federation, FederationConfig,
-                               FederationEngine, History, evaluate,
-                               precision_recall)
+from repro.core.engine import (AsyncFederationEngine, Federation,
+                               FederationConfig, FederationEngine, History,
+                               evaluate, precision_recall)
 from repro.core.federation import (build_federation, run_round,
                                    train_federation)
 from repro.core.graph import (CollaborationGraph, ddist_graph, fedmd_graph,
@@ -15,19 +15,34 @@ from repro.core.policies import (DDistPolicy, FedMDPolicy, ISGDPolicy,
                                  registered_policies)
 from repro.core.protocols import Protocol, ddist, fedmd, isgd, sqmd
 from repro.core.quality import candidate_mask, quality_scores
-from repro.core.schedules import (AlwaysOn, RandomDropout, Schedule,
-                                  StagedJoin, Straggler, as_schedule,
-                                  get_schedule, register_schedule,
-                                  registered_schedules)
+from repro.core.runtime import (ClientRuntime, Clock, Event, EveryKUploads,
+                                EveryUpload, Quorum, ServerBus, SyncClock,
+                                Trigger, WallInterval, as_trigger,
+                                get_trigger, register_trigger,
+                                registered_triggers)
+from repro.core.schedules import (AlwaysOn, ArrivalProcess, BurstyArrivals,
+                                  HeterogeneousCadence, RandomDropout,
+                                  Schedule, ScheduleArrivals, StagedJoin,
+                                  Straggler, StragglerLatency, as_arrivals,
+                                  as_schedule, get_arrivals, get_schedule,
+                                  register_arrivals, register_schedule,
+                                  registered_arrivals, registered_schedules)
 from repro.core.server import (ServerState, init_server, policy_round,
-                               server_round, upload_messengers)
+                               server_round, staleness_summary,
+                               upload_messengers)
 from repro.core.similarity import divergence_matrix, similarity_matrix
 
 __all__ = [
     "local_loss", "ref_loss", "sqmd_grads", "sqmd_loss",
     "Federation", "History", "build_federation", "evaluate",
     "precision_recall", "run_round", "train_federation",
-    "FederationConfig", "FederationEngine",
+    "FederationConfig", "FederationEngine", "AsyncFederationEngine",
+    "Clock", "SyncClock", "Event", "ClientRuntime", "ServerBus",
+    "Trigger", "EveryUpload", "EveryKUploads", "WallInterval", "Quorum",
+    "as_trigger", "get_trigger", "register_trigger", "registered_triggers",
+    "ArrivalProcess", "ScheduleArrivals", "StragglerLatency",
+    "HeterogeneousCadence", "BurstyArrivals", "as_arrivals", "get_arrivals",
+    "register_arrivals", "registered_arrivals", "staleness_summary",
     "CollaborationGraph", "ddist_graph", "fedmd_graph", "graph_stats",
     "select_neighbors", "cohort_messengers", "make_messenger",
     "messenger_bytes", "Protocol", "ddist", "fedmd", "isgd", "sqmd",

@@ -14,12 +14,27 @@ driver hardwired together:
 Round callbacks observe eval-time metrics (``cb(engine, rnd, metrics)``)
 so benchmarks/dashboards hook in without subclassing.
 
+Both engines are thin drivers over the event runtime
+(``repro.core.runtime``): a ``ClientRuntime`` runs the gated local steps,
+a ``ServerBus`` merges messenger uploads staleness-aware and fires policy
+rounds per its ``Trigger``. ``FederationEngine`` is the synchronous
+special case (``SyncClock`` + every-upload trigger — bit-identical
+same-seed trajectories to the pre-runtime round loop);
+``AsyncFederationEngine.fit(until=...)`` drives the full virtual-clock
+event loop over an ``ArrivalProcess``.
+
 Typical use::
 
     engine = FederationEngine.build(ds, splits, zoo, assignment,
                                     sqmd(q=16, k=8),
                                     config=FederationConfig(rounds=40))
     history = engine.fit(splits)
+
+    async_engine = AsyncFederationEngine.build(
+        ds, splits, zoo, assignment, sqmd(q=16, k=8),
+        arrivals=StragglerLatency(fraction=0.3, delay=2.5),
+        trigger=Quorum(frac=0.5))
+    history = async_engine.fit(splits, until=40.0)
 
 The legacy ``build_federation``/``train_federation`` free functions live
 on as deprecation shims in ``repro.core.federation``.
@@ -35,15 +50,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import graph as graph_mod
-from repro.core.client import (Cohort, cohort_accuracy,
-                               cohort_messenger_upload, cohort_step,
-                               make_cohort)
+from repro.core.client import Cohort, cohort_accuracy, make_cohort
 from repro.core.policies import ServerPolicy, as_policy
 from repro.core.protocols import Protocol
-from repro.core.schedules import Schedule, StagedJoin, as_schedule
-from repro.core.server import (ServerState, init_server, policy_round,
-                               upload_messengers)
-from repro.data.pipeline import cohort_batch
+from repro.core.runtime import (ClientRuntime, Clock, ServerBus, SyncClock,
+                                Trigger, as_trigger)
+from repro.core.schedules import (ArrivalProcess, Schedule, StagedJoin,
+                                  as_arrivals, as_schedule)
+from repro.core.server import ServerState, init_server
 from repro.data.partition import ClientSplit, pack_cohort
 from repro.data.synthetic import FederatedDataset
 from repro.optim import Optimizer, sgd
@@ -51,12 +65,20 @@ from repro.optim import Optimizer, sgd
 
 @dataclasses.dataclass
 class History:
+    """Eval-time trajectory. ``rounds`` is the round index (sync) or the
+    nearest virtual tick (async); ``times`` the virtual eval time, so
+    async plots can show accuracy vs. virtual time, not just rounds.
+    ``server_rounds`` counts policy rounds the ServerBus has fired by each
+    eval; ``staleness`` the repository staleness histogram then."""
     rounds: List[int] = dataclasses.field(default_factory=list)
     mean_acc: List[float] = dataclasses.field(default_factory=list)
     per_client_acc: List[np.ndarray] = dataclasses.field(default_factory=list)
     val_acc: List[float] = dataclasses.field(default_factory=list)
     graph_stats: List[dict] = dataclasses.field(default_factory=list)
     mean_loss: List[float] = dataclasses.field(default_factory=list)
+    times: List[float] = dataclasses.field(default_factory=list)
+    server_rounds: List[int] = dataclasses.field(default_factory=list)
+    staleness: List[dict] = dataclasses.field(default_factory=list)
 
     def final_metrics(self, mask: Optional[np.ndarray] = None) -> dict:
         acc = self.per_client_acc[-1]
@@ -128,8 +150,83 @@ class FederationConfig:
 RoundCallback = Callable[["FederationEngine", int, Dict[str, Any]], None]
 
 
+def _init_federation(ds: FederatedDataset, splits: Sequence[ClientSplit],
+                     families: Dict[str, Tuple[Callable, Callable]],
+                     assignment: Sequence[str],
+                     policy: Union[str, Protocol, ServerPolicy],
+                     *, optimizer: Optional[Optimizer] = None, seed: int = 0,
+                     schedule: Union[None, str, Schedule] = None,
+                     join_round: Optional[Sequence[int]] = None
+                     ) -> Tuple[Federation, ServerPolicy, Schedule]:
+    """Shared state construction for both engines. families:
+    {name: (init_fn, apply_fn)}; assignment[n] = family of client n (the
+    paper's Table-I #ResNet8/20/50 ratios)."""
+    optimizer = optimizer or sgd(0.05, momentum=0.9)
+    key = jax.random.key(seed)
+    n = ds.n_clients
+    if len(assignment) != n:
+        raise ValueError(f"assignment has {len(assignment)} entries for "
+                         f"{n} clients")
+    pol = as_policy(policy)
+    cohorts = []
+    for fam, (init_fn, apply_fn) in families.items():
+        ids = [i for i in range(n) if assignment[i] == fam]
+        if not ids:
+            continue
+        key, sub = jax.random.split(key)
+        data = pack_cohort([splits[i] for i in ids])
+        data = {k: jnp.asarray(v) for k, v in data.items()}
+        cohorts.append(make_cohort(fam, init_fn, apply_fn, optimizer,
+                                   ids, data, sub))
+    server = init_server(n, len(ds.ref_y), ds.n_classes)
+    if type(pol).setup is not ServerPolicy.setup:
+        # only policies with one-time state consume a key split, so
+        # same-seed trajectories match the pre-engine driver exactly
+        key, sub = jax.random.split(key)
+        pol.setup(sub, n)
+    sched = as_schedule(schedule, join_round=join_round)
+    fed = Federation(
+        cohorts=cohorts, server=server, protocol=pol.protocol,
+        ref_x=jnp.asarray(ds.ref_x), ref_y=jnp.asarray(ds.ref_y),
+        optimizer=optimizer, n_clients=n,
+        static_weights=getattr(pol, "static_weights", None),
+        join_round=(sched.join_round if isinstance(sched, StagedJoin)
+                    else None),
+        rng=key)
+    return fed, pol, sched
+
+
+def _record_metrics(eng, splits: Sequence[ClientSplit], rnd: int, t: float,
+                    mask: np.ndarray) -> Dict[str, Any]:
+    """Append one eval point to ``eng.history`` (shared by both engines)."""
+    acc = eng.evaluate(splits)
+    vacc = eng.evaluate(splits, which="val")
+    h = eng.history
+    h.rounds.append(rnd)
+    h.times.append(float(t))
+    h.per_client_acc.append(acc)
+    h.mean_acc.append(float(acc[mask].mean()))
+    h.val_acc.append(float(vacc[mask].mean()))
+    h.server_rounds.append(eng.bus.n_triggers)
+    stale = eng.bus.staleness(t)
+    h.staleness.append(stale)
+    metrics: Dict[str, Any] = {
+        "round": rnd, "time": float(t), "acc": h.mean_acc[-1],
+        "val_acc": h.val_acc[-1], "per_client_acc": acc, "joined": mask,
+        "server_rounds": eng.bus.n_triggers, "staleness": stale,
+    }
+    if eng.last_graph is not None:
+        # REAL stats from the policy's last-built graph — no fabricated
+        # placeholder CollaborationGraph
+        h.graph_stats.append(graph_mod.graph_stats(eng.last_graph))
+        metrics["graph"] = h.graph_stats[-1]
+    return metrics
+
+
 class FederationEngine:
-    """Policy- and schedule-agnostic federation driver."""
+    """Policy- and schedule-agnostic federation driver — the synchronous
+    special case of the event runtime (``SyncClock``, every-upload
+    trigger, one wake per round for the schedule's availability mask)."""
 
     def __init__(self, federation: Federation,
                  policy: Union[None, str, Protocol, ServerPolicy] = None,
@@ -144,7 +241,11 @@ class FederationEngine:
                                     join_round=federation.join_round)
         self.config = config or FederationConfig()
         self.callbacks: List[RoundCallback] = list(callbacks)
-        self.last_graph: Optional[graph_mod.CollaborationGraph] = None
+        self.clock: Clock = SyncClock()
+        self.clients = ClientRuntime(federation, self.policy, self.config)
+        self.bus = ServerBus(federation, self.policy,
+                             trigger="every-upload",
+                             backend=self.config.backend)
 
     # -- convenience views -------------------------------------------------
     @property
@@ -158,6 +259,10 @@ class FederationEngine:
     @property
     def n_clients(self) -> int:
         return self.fed.n_clients
+
+    @property
+    def last_graph(self) -> Optional[graph_mod.CollaborationGraph]:
+        return self.bus.last_graph
 
     def add_callback(self, cb: RoundCallback) -> None:
         self.callbacks.append(cb)
@@ -175,80 +280,33 @@ class FederationEngine:
               callbacks: Sequence[RoundCallback] = ()) -> "FederationEngine":
         """families: {name: (init_fn, apply_fn)}; assignment[n] = family of
         client n (the paper's Table-I #ResNet8/20/50 ratios)."""
-        optimizer = optimizer or sgd(0.05, momentum=0.9)
-        key = jax.random.key(seed)
-        n = ds.n_clients
-        if len(assignment) != n:
-            raise ValueError(f"assignment has {len(assignment)} entries for "
-                             f"{n} clients")
-        pol = as_policy(policy)
-        cohorts = []
-        for fam, (init_fn, apply_fn) in families.items():
-            ids = [i for i in range(n) if assignment[i] == fam]
-            if not ids:
-                continue
-            key, sub = jax.random.split(key)
-            data = pack_cohort([splits[i] for i in ids])
-            data = {k: jnp.asarray(v) for k, v in data.items()}
-            cohorts.append(make_cohort(fam, init_fn, apply_fn, optimizer,
-                                       ids, data, sub))
-        server = init_server(n, len(ds.ref_y), ds.n_classes)
-        if type(pol).setup is not ServerPolicy.setup:
-            # only policies with one-time state consume a key split, so
-            # same-seed trajectories match the pre-engine driver exactly
-            key, sub = jax.random.split(key)
-            pol.setup(sub, n)
-        sched = as_schedule(schedule, join_round=join_round)
-        fed = Federation(
-            cohorts=cohorts, server=server, protocol=pol.protocol,
-            ref_x=jnp.asarray(ds.ref_x), ref_y=jnp.asarray(ds.ref_y),
-            optimizer=optimizer, n_clients=n,
-            static_weights=getattr(pol, "static_weights", None),
-            join_round=(sched.join_round if isinstance(sched, StagedJoin)
-                        else None),
-            rng=key)
+        fed, pol, sched = _init_federation(
+            ds, splits, families, assignment, policy, optimizer=optimizer,
+            seed=seed, schedule=schedule, join_round=join_round)
         return cls(fed, policy=pol, schedule=sched, config=config,
                    callbacks=callbacks)
 
     # -- one round ---------------------------------------------------------
     def run_round(self, rnd: int) -> None:
-        """One federation round, in place: local steps for every available
-        client, then (every ``interval`` rounds) the server round."""
-        cfg = self.config
+        """One federation round, in place: a full-federation wake for the
+        schedule's availability mask, then (every ``interval`` rounds) an
+        immediate zero-latency upload that fires the server round."""
         fed = self.fed
-        n, r, c = fed.server.repo_logp.shape
-        avail_np = np.asarray(self.schedule.available(rnd, n), bool)
-        avail = jnp.asarray(avail_np)
-
-        if fed.targets is None:
-            fed.targets = jnp.full((n, r, c), 1.0 / c, jnp.float32)
+        t = float(rnd)
+        self.clock.advance(t)
+        avail_np = np.asarray(self.schedule.available(rnd, fed.n_clients),
+                              bool)
 
         # --- local steps (line 12) ---
         use_ref = self.policy.uses_reference and rnd > 0
-        for _ in range(cfg.local_steps):
-            for coh in fed.cohorts:
-                fed.rng, sub = jax.random.split(fed.rng)
-                batch = cohort_batch(sub, coh.data, cfg.batch_size)
-                rows = jnp.asarray(coh.client_ids)
-                coh.params, coh.opt_state, _ = cohort_step(
-                    coh.apply_fn, fed.optimizer, coh.params, coh.opt_state,
-                    batch["x"], batch["y"], fed.ref_x, fed.targets[rows],
-                    avail[rows], self.policy.rho, use_ref)
+        self.clients.local_round(avail_np, use_ref)
 
         # --- communication step (lines 5-10) ---
         if self.policy.uses_reference and rnd % self.policy.interval == 0:
-            msg = jnp.zeros((n, r, c), jnp.float32)
-            for coh in fed.cohorts:
-                m = cohort_messenger_upload(coh.apply_fn, coh.params,
-                                            fed.ref_x)
-                msg = msg.at[jnp.asarray(coh.client_ids)].set(m)
-            fed.server = upload_messengers(fed.server, msg, avail)
-            fed.server, fed.targets, self.last_graph = policy_round(
-                fed.server, self.policy, fed.ref_y, backend=cfg.backend)
+            msg = self.clients.collect_messengers(avail_np)
+            self.bus.deliver(t, msg, avail_np)
         else:
-            fed.server = fed.server._replace(
-                active=fed.server.active | avail,
-                round=fed.server.round + 1)
+            self.bus.observe(t, avail_np)
 
     # -- evaluation --------------------------------------------------------
     def evaluate(self, splits: Sequence[ClientSplit],
@@ -257,26 +315,10 @@ class FederationEngine:
 
     def _record(self, splits: Sequence[ClientSplit], rnd: int
                 ) -> Dict[str, Any]:
-        acc = self.evaluate(splits)
-        vacc = self.evaluate(splits, which="val")
         mask = np.asarray(self.schedule.joined(rnd, self.n_clients), bool)
         if not mask.any():
             mask = np.ones_like(mask)
-        h = self.history
-        h.rounds.append(rnd)
-        h.per_client_acc.append(acc)
-        h.mean_acc.append(float(acc[mask].mean()))
-        h.val_acc.append(float(vacc[mask].mean()))
-        metrics: Dict[str, Any] = {
-            "round": rnd, "acc": h.mean_acc[-1], "val_acc": h.val_acc[-1],
-            "per_client_acc": acc, "joined": mask,
-        }
-        if self.last_graph is not None:
-            # REAL stats from the policy's last-built graph — no fabricated
-            # placeholder CollaborationGraph
-            h.graph_stats.append(graph_mod.graph_stats(self.last_graph))
-            metrics["graph"] = h.graph_stats[-1]
-        return metrics
+        return _record_metrics(self, splits, rnd, float(rnd), mask)
 
     # -- the training loop -------------------------------------------------
     def fit(self, splits: Sequence[ClientSplit]) -> History:
@@ -293,16 +335,166 @@ class FederationEngine:
         return self.history
 
 
+class AsyncFederationEngine:
+    """Event-driven federation driver on a virtual clock.
+
+    Clients wake per an ``ArrivalProcess`` (cadence/burst/latency model),
+    messenger uploads travel with per-client latency and merge into the
+    repository **on arrival** (stale rows persist until overwritten —
+    merged, never dropped), and the ``ServerBus`` fires policy rounds per
+    its ``Trigger`` (every-k uploads, wall interval, quorum, ...).
+
+    ``fit(until=...)`` drains all events up to a virtual-time horizon and
+    can be called again with a larger horizon to continue the same run;
+    in-flight uploads scheduled past the horizon stay queued. Evals are
+    recorded every ``config.eval_every`` virtual seconds plus at the
+    horizon itself."""
+
+    def __init__(self, federation: Federation,
+                 policy: Union[None, str, Protocol, ServerPolicy] = None,
+                 arrivals: Union[None, str, Schedule, ArrivalProcess] = None,
+                 trigger: Union[None, str, Trigger] = None,
+                 config: Optional[FederationConfig] = None,
+                 callbacks: Sequence[RoundCallback] = ()):
+        self.fed = federation
+        self.policy = as_policy(policy if policy is not None
+                                else federation.protocol,
+                                static_weights=federation.static_weights)
+        if self.policy.uses_reference and self.policy.interval != 1:
+            raise ValueError(
+                f"Protocol.interval={self.policy.interval} is a "
+                f"round-synchronous concept; under the event clock express "
+                f"server cadence with a Trigger instead (every-k, "
+                f"interval, quorum)")
+        self.arrivals = as_arrivals(arrivals)
+        self.config = config or FederationConfig()
+        self.callbacks: List[RoundCallback] = list(callbacks)
+        self.clock = Clock()
+        self.clients = ClientRuntime(federation, self.policy, self.config)
+        self.bus = ServerBus(federation, self.policy,
+                             trigger=as_trigger(trigger),
+                             backend=self.config.backend)
+        self._seeded_until = -1.0
+
+    # -- convenience views -------------------------------------------------
+    server = FederationEngine.server
+    history = FederationEngine.history
+    n_clients = FederationEngine.n_clients
+    last_graph = FederationEngine.last_graph
+    add_callback = FederationEngine.add_callback
+    evaluate = FederationEngine.evaluate
+
+    @classmethod
+    def build(cls, ds: FederatedDataset, splits: Sequence[ClientSplit],
+              families: Dict[str, Tuple[Callable, Callable]],
+              assignment: Sequence[str],
+              policy: Union[str, Protocol, ServerPolicy],
+              *, arrivals: Union[None, str, Schedule, ArrivalProcess] = None,
+              trigger: Union[None, str, Trigger] = None,
+              config: Optional[FederationConfig] = None,
+              optimizer: Optional[Optimizer] = None, seed: int = 0,
+              callbacks: Sequence[RoundCallback] = ()
+              ) -> "AsyncFederationEngine":
+        fed, pol, _ = _init_federation(
+            ds, splits, families, assignment, policy, optimizer=optimizer,
+            seed=seed)
+        return cls(fed, policy=pol, arrivals=arrivals, trigger=trigger,
+                   config=config, callbacks=callbacks)
+
+    # -- event seeding -----------------------------------------------------
+    def _seed_events(self, until: float) -> None:
+        lo = self._seeded_until
+        n = self.n_clients
+        for t, mask in self.arrivals.wakes(n, until):
+            if t > lo:
+                self.clock.schedule(t, "wake", np.asarray(mask, bool))
+        period = self.bus.trigger.wall_period()
+        if period is not None:
+            k = max(0, int(np.floor(lo / period)) + 1)
+            while k * period <= until + 1e-9:
+                if k * period > lo:
+                    self.clock.schedule(k * period, "server-tick")
+                k += 1
+        every = float(self.config.eval_every)
+        k = max(0, int(np.floor(lo / every)) + 1)
+        on_grid = False
+        while k * every <= until + 1e-9:
+            if k * every > lo:
+                self.clock.schedule(k * every, "eval")
+                on_grid = on_grid or abs(k * every - until) < 1e-9
+            k += 1
+        if not on_grid and until > lo:
+            self.clock.schedule(until, "eval")   # terminal eval
+        # never regress the watermark: a later fit() with a smaller
+        # horizon must not re-seed (and replay) already-run events
+        self._seeded_until = max(lo, until)
+
+    # -- dispatch ----------------------------------------------------------
+    def _dispatch(self, ev, splits: Sequence[ClientSplit]) -> None:
+        t = ev.time
+        if ev.kind == "wake":
+            # an all-False wake still runs the (fully gated) local round
+            # and a zero-row upload, so the RNG stream and server-round
+            # cadence match the sync engine round for round
+            mask = np.asarray(ev.payload, bool)
+            use_ref = (self.policy.uses_reference
+                       and self.bus.n_triggers > 0)
+            self.clients.local_round(mask, use_ref)
+            if self.policy.uses_reference:
+                msg = self.clients.collect_messengers(mask)
+                lat = np.asarray(
+                    self.arrivals.latency(t, mask, self.n_clients), float)
+                for d in (np.unique(lat[mask]) if mask.any() else [0.0]):
+                    sub = mask & (lat == d) if mask.any() else mask
+                    self.clock.schedule(t + float(d), "upload",
+                                        (sub, msg, t))
+            else:
+                self.bus.observe(t, mask)
+        elif ev.kind == "upload":
+            sub, msg, produced_at = ev.payload
+            self.bus.deliver(t, msg, sub, produced_at=produced_at)
+        elif ev.kind == "server-tick":
+            self.bus.tick(t)
+        elif ev.kind == "eval":
+            self._record(splits, t)
+
+    def _record(self, splits: Sequence[ClientSplit], t: float) -> None:
+        rnd = int(round(t))
+        joined = self.arrivals.joined(t, self.n_clients)
+        mask = (np.asarray(joined, bool) if joined is not None
+                else self.clients.ever_woken.copy())
+        if not mask.any():
+            mask = np.ones(self.n_clients, bool)
+        metrics = _record_metrics(self, splits, rnd, t, mask)
+        for cb in self.callbacks:
+            cb(self, rnd, metrics)
+        if self.config.verbose:
+            print(f"  t={t:7.2f}  acc={self.history.mean_acc[-1]:.4f}  "
+                  f"server_rounds={self.bus.n_triggers}")
+
+    # -- the event loop ----------------------------------------------------
+    def fit(self, splits: Sequence[ClientSplit],
+            until: Optional[float] = None) -> History:
+        """Drain all events with virtual time <= ``until`` (default: the
+        config's round budget, matching the sync engine's horizon)."""
+        until = float(self.config.rounds - 1) if until is None \
+            else float(until)
+        self._seed_events(until)
+        while (ev := self.clock.pop_due(until)) is not None:
+            self._dispatch(ev, splits)
+        return self.history
+
+
 def evaluate(fed: Federation, splits: Sequence[ClientSplit],
              which: str = "test") -> np.ndarray:
     """Per-client accuracy (N,) on the requested split."""
     accs = np.zeros(fed.n_clients)
     for coh in fed.cohorts:
-        xs = np.stack([getattr(splits[i], f"{which}_x")[
-            :min(len(getattr(splits[j], f"{which}_y"))
-                 for j in coh.client_ids)]
-            for i in coh.client_ids])
-        ys = np.stack([getattr(splits[i], f"{which}_y")[:xs.shape[1]]
+        m = min(len(getattr(splits[j], f"{which}_y"))
+                for j in coh.client_ids)
+        xs = np.stack([getattr(splits[i], f"{which}_x")[:m]
+                       for i in coh.client_ids])
+        ys = np.stack([getattr(splits[i], f"{which}_y")[:m]
                        for i in coh.client_ids])
         a = cohort_accuracy(coh.apply_fn, coh.params, jnp.asarray(xs),
                             jnp.asarray(ys))

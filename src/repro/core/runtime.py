@@ -1,0 +1,378 @@
+"""Event-driven virtual-time runtime: Clock/Event, server Triggers, and
+the ClientRuntime / ServerBus halves of the federation.
+
+The paper's reliability claim is about *asynchrony*: messengers arrive
+stale, clients tick at their own cadence, and the server's dynamic graph
+absorbs whatever the repository holds (``upload_messengers`` keeps stale
+rows — they are merged, never dropped). This module gives that a
+first-class time model:
+
+  * ``Clock``   — a monotone virtual clock with a deterministic event
+    queue (ties break by event-kind priority, then FIFO). ``SyncClock``
+    is the degenerate round-synchronous case: time == round index.
+  * ``ClientRuntime`` — wraps the Federation's cohorts; a wake mask picks
+    which clients run gated vmapped local steps and produce messengers
+    (the rest stay frozen — exactly the sync engine's semantics).
+  * ``ServerBus`` — receives ``MessengerUpload`` deliveries at arbitrary
+    virtual times, merges them staleness-aware into ``ServerState``, and
+    fires ``policy_round`` when its ``Trigger`` says so: after every
+    upload (the sync special case), every K uploads, on a wall-clock
+    interval, or on a quorum of distinct uploaders.
+
+``FederationEngine`` composes these with a ``SyncClock`` + every-upload
+trigger (bit-identical same-seed trajectories to the round loop it
+replaced); ``AsyncFederationEngine.fit(until=...)`` drives the full event
+loop over an ``ArrivalProcess`` (``repro.core.schedules``).
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+import heapq
+from typing import Any, Dict, List, Optional, Tuple, Type, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.client import (cohort_messenger_upload, cohort_step)
+from repro.core.server import (policy_round, staleness_summary,
+                               upload_messengers)
+from repro.data.pipeline import cohort_batch
+
+# --------------------------------------------------------------------------
+# Clock / Event
+# --------------------------------------------------------------------------
+
+# Same-instant ordering: uploads merge before the server's wall tick looks
+# at the repository, wakes train after the server settles, evals observe
+# the fully-settled instant.
+_KIND_PRIORITY = {"upload": 0, "server-tick": 1, "wake": 2, "eval": 3}
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    time: float
+    kind: str
+    payload: Any = None
+
+
+class Clock:
+    """Monotone virtual clock + deterministic event queue."""
+
+    def __init__(self, t0: float = 0.0):
+        self.now = float(t0)
+        self._heap: List[Tuple[float, int, int, Event]] = []
+        self._seq = 0
+
+    def schedule(self, time: float, kind: str, payload: Any = None) -> None:
+        if time < self.now - 1e-9:
+            raise ValueError(f"cannot schedule {kind!r} at t={time} in the "
+                             f"past (now={self.now})")
+        ev = Event(float(time), kind, payload)
+        heapq.heappush(self._heap, (ev.time, _KIND_PRIORITY.get(kind, 9),
+                                    self._seq, ev))
+        self._seq += 1
+
+    def pop_due(self, until: float) -> Optional[Event]:
+        """Pop the next event with time <= until and advance ``now`` to it;
+        None when nothing is due (later events stay queued)."""
+        if self._heap and self._heap[0][0] <= until + 1e-9:
+            ev = heapq.heappop(self._heap)[3]
+            self.now = max(self.now, ev.time)
+            return ev
+        return None
+
+    def peek_time(self) -> Optional[float]:
+        return self._heap[0][0] if self._heap else None
+
+    def advance(self, t: float) -> None:
+        self.now = max(self.now, float(t))
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+
+class SyncClock(Clock):
+    """The round-synchronous degenerate clock: virtual time is the round
+    index and no events queue — ``FederationEngine`` advances it as it
+    loops."""
+
+
+# --------------------------------------------------------------------------
+# Server triggers
+# --------------------------------------------------------------------------
+
+_TRIGGERS: Dict[str, Type["Trigger"]] = {}
+
+
+def register_trigger(name: str):
+    def deco(cls: Type["Trigger"]) -> Type["Trigger"]:
+        if name in _TRIGGERS:
+            raise ValueError(f"trigger {name!r} already registered")
+        cls.name = name
+        _TRIGGERS[name] = cls
+        return cls
+
+    return deco
+
+
+def registered_triggers() -> Tuple[str, ...]:
+    return tuple(sorted(_TRIGGERS))
+
+
+def get_trigger(name: str) -> Type["Trigger"]:
+    try:
+        return _TRIGGERS[name]
+    except KeyError:
+        raise KeyError(f"unknown trigger {name!r}; registered: "
+                       f"{registered_triggers()}") from None
+
+
+class Trigger(abc.ABC):
+    """When the ServerBus runs ``policy_round``. Stateless predicates over
+    the bus's upload counters, so triggers compose with any policy."""
+
+    name: str = "?"
+
+    def should_fire(self, t: float, bus: "ServerBus") -> bool:
+        """Checked after every upload delivery."""
+        return False
+
+    def should_fire_on_tick(self, t: float, bus: "ServerBus") -> bool:
+        """Checked at wall ticks (only for triggers with a period)."""
+        return False
+
+    def wall_period(self) -> Optional[float]:
+        """Virtual-time period between server ticks, or None."""
+        return None
+
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}()"
+
+
+@register_trigger("every-upload")
+class EveryUpload(Trigger):
+    """Fire after every delivery — ``FederationEngine``'s sync special
+    case (one upload batch per communication round)."""
+
+    def should_fire(self, t: float, bus: "ServerBus") -> bool:
+        return True
+
+
+@register_trigger("every-k")
+class EveryKUploads(Trigger):
+    """Fire once ``k`` client-rows have merged since the last fire."""
+
+    def __init__(self, k: int = 8):
+        if k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
+        self.k = k
+
+    def should_fire(self, t: float, bus: "ServerBus") -> bool:
+        return bus.uploads_since_fire >= self.k
+
+    def __repr__(self) -> str:
+        return f"EveryKUploads(k={self.k})"
+
+
+@register_trigger("interval")
+class WallInterval(Trigger):
+    """Fire on a virtual-time cadence (every ``period``), provided at
+    least one upload arrived since the last fire."""
+
+    def __init__(self, period: float = 1.0):
+        if period <= 0:
+            raise ValueError(f"period must be > 0, got {period}")
+        self.period = float(period)
+
+    def wall_period(self) -> Optional[float]:
+        return self.period
+
+    def should_fire_on_tick(self, t: float, bus: "ServerBus") -> bool:
+        return True
+
+    def __repr__(self) -> str:
+        return f"WallInterval(period={self.period})"
+
+
+@register_trigger("quorum")
+class Quorum(Trigger):
+    """Fire once a quorum of *distinct* clients has uploaded since the
+    last fire — ``count`` absolute, else ``ceil(frac * n_clients)``."""
+
+    def __init__(self, count: Optional[int] = None, frac: float = 0.5):
+        if count is not None and count < 1:
+            raise ValueError(f"count must be >= 1, got {count}")
+        if not 0.0 < frac <= 1.0:
+            raise ValueError(f"frac must be in (0, 1], got {frac}")
+        self.count = count
+        self.frac = frac
+
+    def needed(self, n_clients: int) -> int:
+        if self.count is not None:
+            return self.count
+        return max(1, int(np.ceil(self.frac * n_clients)))
+
+    def should_fire(self, t: float, bus: "ServerBus") -> bool:
+        return (int(bus.fresh_since_fire.sum())
+                >= self.needed(bus.fed.n_clients))
+
+    def __repr__(self) -> str:
+        return (f"Quorum(count={self.count})" if self.count is not None
+                else f"Quorum(frac={self.frac})")
+
+
+def as_trigger(trigger: Union[None, str, Trigger]) -> Trigger:
+    """Coerce None/name/instance into a Trigger (None => every-upload)."""
+    if isinstance(trigger, Trigger):
+        return trigger
+    if isinstance(trigger, str):
+        return get_trigger(trigger)()
+    return EveryUpload()
+
+
+# --------------------------------------------------------------------------
+# ClientRuntime — the client half
+# --------------------------------------------------------------------------
+
+class ClientRuntime:
+    """Runs the cohorts' gated local steps and produces messengers.
+
+    One wake = ``config.local_steps`` vmapped SGD steps for every client in
+    the mask (clients outside it stay frozen, params and optimizer state).
+    RNG consumption order (one split per cohort per step, cohorts in build
+    order) is identical to the old round loop, which is what makes the
+    sync engine bit-identical on the same seed."""
+
+    def __init__(self, federation, policy, config):
+        self.fed = federation
+        self.policy = policy
+        self.config = config
+        self.ever_woken = np.zeros(federation.n_clients, bool)
+
+    def local_round(self, mask_np: np.ndarray, use_ref: bool) -> None:
+        """One local round for the masked clients, in place."""
+        fed, cfg = self.fed, self.config
+        n, r, c = fed.server.repo_logp.shape
+        if fed.targets is None:
+            fed.targets = jnp.full((n, r, c), 1.0 / c, jnp.float32)
+        self.ever_woken |= mask_np
+        avail = jnp.asarray(mask_np)
+        for _ in range(cfg.local_steps):
+            for coh in fed.cohorts:
+                fed.rng, sub = jax.random.split(fed.rng)
+                batch = cohort_batch(sub, coh.data, cfg.batch_size)
+                rows = jnp.asarray(coh.client_ids)
+                coh.params, coh.opt_state, _ = cohort_step(
+                    coh.apply_fn, fed.optimizer, coh.params, coh.opt_state,
+                    batch["x"], batch["y"], fed.ref_x, fed.targets[rows],
+                    avail[rows], self.policy.rho, use_ref)
+
+    def collect_messengers(self,
+                           mask_np: Optional[np.ndarray] = None
+                           ) -> jnp.ndarray:
+        """(N,R,C) messenger log-probs; cohorts with no masked client are
+        skipped (their rows are masked out of the merge anyway)."""
+        fed = self.fed
+        n, r, c = fed.server.repo_logp.shape
+        msg = jnp.zeros((n, r, c), jnp.float32)
+        for coh in fed.cohorts:
+            if mask_np is not None and not mask_np[coh.client_ids].any():
+                continue
+            m = cohort_messenger_upload(coh.apply_fn, coh.params, fed.ref_x)
+            msg = msg.at[jnp.asarray(coh.client_ids)].set(m)
+        return msg
+
+
+# --------------------------------------------------------------------------
+# ServerBus — the server half
+# --------------------------------------------------------------------------
+
+class ServerBus:
+    """Absorbs messenger uploads at arbitrary virtual times and fires
+    policy rounds per its trigger.
+
+    ``deliver`` merges the masked rows into the repository via
+    ``upload_messengers`` — rows of clients not in the mask keep their
+    stale value (merged, never dropped) — then asks the trigger whether to
+    run ``policy_round``. ``tick`` is the wall-interval hook. Staleness of
+    every repository row (virtual age of its newest merge) is summarized
+    at each fire and at eval time."""
+
+    def __init__(self, federation, policy, trigger: Union[None, str,
+                                                          Trigger] = None,
+                 backend: Optional[str] = None):
+        self.fed = federation
+        self.policy = policy
+        self.trigger = as_trigger(trigger)
+        self.backend = backend
+        n = federation.n_clients
+        self.last_upload_t = np.full(n, -np.inf)
+        self.uploads_since_fire = 0                 # rows merged
+        self.fresh_since_fire = np.zeros(n, bool)   # distinct uploaders
+        self.n_uploads = 0
+        self.n_triggers = 0
+        self.last_graph = None
+        self.last_staleness: Optional[dict] = None
+
+    def deliver(self, t: float, msg: jnp.ndarray, uploaded: np.ndarray,
+                produced_at: Optional[float] = None) -> bool:
+        """Merge one upload batch arriving at time ``t``; returns True if
+        the trigger fired a policy round. ``produced_at`` is when the
+        messengers were computed (default ``t``) — a latency-delayed
+        upload merges already stale, and staleness tracks the content's
+        age, not the arrival instant. Newest content wins per row: an
+        out-of-order arrival older than what a row already holds is
+        superseded and skipped (it would *regress* the repository — this
+        is not the stale-row-keeping, which is about rows nobody
+        refreshed). The trigger is consulted even for an empty batch, so
+        an every-upload (sync) communication round with no available
+        client still fires its policy round."""
+        pt = t if produced_at is None else produced_at
+        up = np.asarray(uploaded, bool) & (pt >= self.last_upload_t)
+        fed = self.fed
+        fed.server = upload_messengers(fed.server, msg, jnp.asarray(up))
+        self.last_upload_t = np.where(up, pt, self.last_upload_t)
+        k = int(up.sum())
+        self.n_uploads += k
+        self.uploads_since_fire += k
+        self.fresh_since_fire |= up
+        if self.trigger.should_fire(t, self):
+            self.fire(t)
+            return True
+        return False
+
+    def tick(self, t: float) -> bool:
+        """Wall tick: fire if the trigger wants to and new uploads exist
+        (an unchanged repository would just recompute the same graph)."""
+        if self.uploads_since_fire and self.trigger.should_fire_on_tick(
+                t, self):
+            self.fire(t)
+            return True
+        return False
+
+    def fire(self, t: float) -> None:
+        """Run policy_round now: grade -> build graph -> emit targets."""
+        fed = self.fed
+        fed.server, fed.targets, self.last_graph = policy_round(
+            fed.server, self.policy, fed.ref_y, backend=self.backend)
+        self.n_triggers += 1
+        self.last_staleness = self.staleness(t)
+        self.uploads_since_fire = 0
+        self.fresh_since_fire[:] = False
+
+    def observe(self, t: float, mask_np: np.ndarray) -> None:
+        """Non-communication round: mark the masked clients active and
+        advance the server's round counter (the sync engine's off-interval
+        branch, and the whole story for reference-free policies)."""
+        fed = self.fed
+        fed.server = fed.server._replace(
+            active=fed.server.active | jnp.asarray(np.asarray(mask_np,
+                                                              bool)),
+            round=fed.server.round + 1)
+
+    def staleness(self, now: float) -> dict:
+        return staleness_summary(self.last_upload_t,
+                                 np.asarray(self.fed.server.active, bool),
+                                 now)

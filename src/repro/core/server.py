@@ -14,9 +14,10 @@ returns the per-client distillation targets (the K^n payloads).
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple, Union
+from typing import NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import quality as quality_mod
 from repro.core.protocols import Protocol
@@ -56,6 +57,31 @@ def upload_messengers(state: ServerState, messengers_logp: jnp.ndarray,
     repo = jnp.where(mask, messengers_logp.astype(jnp.float32),
                      state.repo_logp)
     return state._replace(repo_logp=repo, active=state.active | uploaded)
+
+
+STALENESS_BINS: Tuple[float, ...] = (0.0, 1.0, 2.0, 4.0, 8.0)
+
+
+def staleness_summary(last_upload_t: np.ndarray, active: np.ndarray,
+                      now: float,
+                      bins: Sequence[float] = STALENESS_BINS) -> dict:
+    """Histogram of repository-row staleness at virtual time ``now``.
+
+    A row's staleness is the age of its newest merged messenger
+    (``now - last_upload_t``); rows of clients that never uploaded are
+    excluded. Stale rows stay in the repository (merged, never dropped),
+    so this is the distribution the dynamic graph actually grades over.
+    Returns plain-python values (JSON-serializable for run summaries)."""
+    last = np.asarray(last_upload_t, float)
+    ages = now - last[np.asarray(active, bool) & np.isfinite(last)]
+    edges = list(bins) + [np.inf]
+    if ages.size == 0:
+        return {"n": 0, "mean": 0.0, "max": 0.0, "n_stale": 0,
+                "hist": [0] * (len(edges) - 1), "bin_edges": list(bins)}
+    hist, _ = np.histogram(ages, bins=edges)
+    return {"n": int(ages.size), "mean": float(ages.mean()),
+            "max": float(ages.max()), "n_stale": int((ages > 1e-9).sum()),
+            "hist": [int(h) for h in hist], "bin_edges": list(bins)}
 
 
 def policy_round(state: ServerState, policy, ref_labels: jnp.ndarray,

@@ -34,7 +34,10 @@ def default_backend() -> str:
 
 def set_default_backend(name: str) -> None:
     global _DEFAULT_BACKEND
-    assert name in ("pallas", "interpret", "jnp")
+    if name not in ("pallas", "interpret", "jnp"):
+        # ValueError (not assert) so the guard survives python -O
+        raise ValueError(f"unknown backend {name!r}; expected 'pallas', "
+                         f"'interpret', or 'jnp'")
     _DEFAULT_BACKEND = name
 
 

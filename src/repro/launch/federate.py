@@ -1,25 +1,34 @@
-"""Federation launch CLI — drive the FederationEngine from the shell.
+"""Federation launch CLI — drive the Federation engines from the shell.
 
-Any registered policy and availability schedule is reachable by name (the
-registries are the single source of truth; new plugins show up here with
-zero changes to this file):
+Any registered policy, availability schedule, arrival process, and server
+trigger is reachable by name (the registries are the single source of
+truth; new plugins show up here with zero changes to this file):
 
   PYTHONPATH=src python -m repro.launch.federate --policy sqmd --rounds 40
   PYTHONPATH=src python -m repro.launch.federate --policy fedmd \
       --schedule dropout --dropout-p 0.3 --dataset sc_like
-  PYTHONPATH=src python -m repro.launch.federate --policy sqmd \
-      --schedule staged-join --stages 3 --backend jnp --ckpt runs/fed
+
+Event clock (virtual-time async runtime):
+
+  PYTHONPATH=src python -m repro.launch.federate --clock event \
+      --arrivals straggler-latency --latency 2.5 --trigger quorum
+  PYTHONPATH=src python -m repro.launch.federate --clock event \
+      --arrivals bursty --trigger every-k --trigger-k 10 --until 60
 """
 from __future__ import annotations
 
 import argparse
 import json
 import time
-from typing import Optional
+from typing import Optional, Union
 
-from repro.core import (FederationConfig, FederationEngine, Protocol,
-                        RandomDropout, Schedule, StagedJoin, Straggler,
-                        precision_recall, registered_policies)
+from repro.core import (ArrivalProcess, AsyncFederationEngine,
+                        BurstyArrivals, EveryKUploads, FederationConfig,
+                        FederationEngine, HeterogeneousCadence, Protocol,
+                        Quorum, RandomDropout, Schedule, ScheduleArrivals,
+                        StagedJoin, Straggler, StragglerLatency, Trigger,
+                        WallInterval, precision_recall, registered_arrivals,
+                        registered_policies, registered_triggers)
 from repro.data import fmnist_like, make_splits, pad_like, sc_like
 from repro.models.mlp import hetero_mlp_zoo
 
@@ -39,6 +48,33 @@ def make_schedule(args, n_clients: int, rounds: int) -> Optional[Schedule]:
         return Straggler(fraction=args.straggler_fraction,
                          period=args.straggler_period, seed=args.seed)
     return None  # always-on
+
+
+def make_arrivals(args, n_clients: int, rounds: int) -> ArrivalProcess:
+    if args.arrivals == "schedule":
+        return ScheduleArrivals(make_schedule(args, n_clients, rounds))
+    if args.arrivals == "straggler-latency":
+        return StragglerLatency(fraction=args.straggler_fraction,
+                                delay=args.latency, seed=args.seed)
+    if args.arrivals == "cadence":
+        return HeterogeneousCadence(fast=args.cadence_fast,
+                                    slow=args.cadence_slow, seed=args.seed)
+    if args.arrivals == "bursty":
+        return BurstyArrivals(burst_every=args.burst_every,
+                              jitter=args.latency, seed=args.seed)
+    # any other registered plugin: construct with its defaults
+    from repro.core import get_arrivals
+    return get_arrivals(args.arrivals)()
+
+
+def make_trigger(args) -> Union[str, Trigger]:
+    if args.trigger == "every-k":
+        return EveryKUploads(k=args.trigger_k)
+    if args.trigger == "interval":
+        return WallInterval(period=args.trigger_period)
+    if args.trigger == "quorum":
+        return Quorum(frac=args.quorum_frac)
+    return args.trigger  # every-upload (or any future registered name)
 
 
 def main() -> None:
@@ -61,6 +97,27 @@ def main() -> None:
     ap.add_argument("--dropout-p", type=float, default=0.2)
     ap.add_argument("--straggler-fraction", type=float, default=0.3)
     ap.add_argument("--straggler-period", type=int, default=3)
+    # --- event clock (async virtual-time runtime) ---
+    ap.add_argument("--clock", choices=("sync", "event"), default="sync",
+                    help="sync: round loop; event: virtual-clock runtime")
+    ap.add_argument("--until", type=float,
+                    help="event clock: virtual-time horizon "
+                         "(default rounds-1)")
+    ap.add_argument("--arrivals", choices=registered_arrivals(),
+                    default="schedule",
+                    help="event clock: client arrival/latency process "
+                         "('schedule' shims --schedule)")
+    ap.add_argument("--latency", type=float, default=2.0,
+                    help="straggler-latency upload delay / bursty jitter")
+    ap.add_argument("--cadence-fast", type=float, default=1.0)
+    ap.add_argument("--cadence-slow", type=float, default=3.0)
+    ap.add_argument("--burst-every", type=float, default=4.0)
+    ap.add_argument("--trigger", choices=registered_triggers(),
+                    default="every-upload",
+                    help="event clock: when the server fires policy rounds")
+    ap.add_argument("--trigger-k", type=int, default=8)
+    ap.add_argument("--trigger-period", type=float, default=1.0)
+    ap.add_argument("--quorum-frac", type=float, default=0.5)
     ap.add_argument("--samples-per-client", type=int, default=60)
     ap.add_argument("--ref-size", type=int, default=120)
     ap.add_argument("--label-noise", type=float, default=0.3)
@@ -82,23 +139,43 @@ def main() -> None:
                               local_steps=args.local_steps,
                               eval_every=args.eval_every,
                               backend=args.backend, verbose=True)
-    schedule = make_schedule(args, ds.n_clients, args.rounds)
-    print(f"policy={args.policy} schedule={schedule or 'always-on'} "
-          f"dataset={args.dataset} clients={ds.n_clients} config={config}")
-
-    engine = FederationEngine.build(ds, splits, zoo, assignment, protocol,
-                                    config=config, schedule=schedule,
-                                    seed=args.seed + 1)
     t0 = time.time()
-    hist = engine.fit(splits)
+    if args.clock == "event":
+        arrivals = make_arrivals(args, ds.n_clients, args.rounds)
+        trigger = make_trigger(args)
+        print(f"policy={args.policy} clock=event arrivals={arrivals!r} "
+              f"trigger={trigger!r} dataset={args.dataset} "
+              f"clients={ds.n_clients} config={config}")
+        engine = AsyncFederationEngine.build(
+            ds, splits, zoo, assignment, protocol, arrivals=arrivals,
+            trigger=trigger, config=config, seed=args.seed + 1)
+        hist = engine.fit(splits, until=args.until)
+    else:
+        schedule = make_schedule(args, ds.n_clients, args.rounds)
+        print(f"policy={args.policy} schedule={schedule or 'always-on'} "
+              f"dataset={args.dataset} clients={ds.n_clients} "
+              f"config={config}")
+        engine = FederationEngine.build(ds, splits, zoo, assignment,
+                                        protocol, config=config,
+                                        schedule=schedule,
+                                        seed=args.seed + 1)
+        hist = engine.fit(splits)
     prec, rec = precision_recall(engine.fed, splits, ds.n_classes)
     summary = {
         "policy": args.policy, "dataset": args.dataset,
-        "schedule": args.schedule, "rounds": args.rounds,
+        "clock": args.clock, "rounds": args.rounds,
         "final_acc": hist.mean_acc[-1], "selected_acc": hist.selected_acc,
         "macro_precision": prec, "macro_recall": rec,
+        "virtual_time": hist.times[-1],
+        "server_rounds": hist.server_rounds[-1],
+        "staleness": hist.staleness[-1],
         "wall_s": round(time.time() - t0, 1),
     }
+    if args.clock == "event":
+        summary["arrivals"] = repr(engine.arrivals)
+        summary["trigger"] = repr(engine.bus.trigger)
+    else:
+        summary["schedule"] = args.schedule
     if hist.graph_stats:
         summary["graph"] = hist.graph_stats[-1]
     if args.ckpt:
