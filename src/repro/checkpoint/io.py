@@ -93,7 +93,14 @@ def restore_federation(ckpt_dir: str, fed, step: Optional[int] = None):
     from repro.core.server import ServerState
     step = step if step is not None else latest_step(ckpt_dir)
     tree = restore_pytree(os.path.join(ckpt_dir, f"step_{step}.msgpack"))
-    fed.server = ServerState(**tree["server"])
+    server = dict(tree["server"])
+    if "div_cache" not in server:
+        # pre-delta-path checkpoint: rebuild the divergence cache from the
+        # restored repository so incremental graph updates stay exact
+        # (ops dispatch: chunked at large N, platform backend)
+        from repro.kernels import ops
+        server["div_cache"] = ops.pairwise_kl(server["repo_logp"])
+    fed.server = ServerState(**server)
     for c, saved in zip(fed.cohorts, tree["cohorts"]):
         assert c.family_name == saved["family"], "cohort layout changed"
         c.params = saved["params"]

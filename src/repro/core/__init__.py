@@ -30,7 +30,8 @@ from repro.core.schedules import (AlwaysOn, ArrivalProcess, BurstyArrivals,
 from repro.core.server import (ServerState, init_server, policy_round,
                                server_round, staleness_summary,
                                upload_messengers)
-from repro.core.similarity import divergence_matrix, similarity_matrix
+from repro.core.similarity import (divergence_matrix, similarity_matrix,
+                                   update_divergence_cache)
 
 __all__ = [
     "local_loss", "ref_loss", "sqmd_grads", "sqmd_loss",
@@ -54,5 +55,5 @@ __all__ = [
     "registered_schedules",
     "candidate_mask", "quality_scores", "ServerState", "init_server",
     "policy_round", "server_round", "upload_messengers",
-    "divergence_matrix", "similarity_matrix",
+    "divergence_matrix", "similarity_matrix", "update_divergence_cache",
 ]

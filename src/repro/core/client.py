@@ -75,10 +75,11 @@ def cohort_step(apply_fn, optimizer: Optimizer, params, opt_state,
         new_p = jax.tree.map(
             lambda a, u: (a + gate * u.astype(a.dtype)).astype(a.dtype),
             p, updates)
-        # freeze optimizer state too when inactive
-        new_s = jax.tree.map(
-            lambda a, b: jnp.where(on, b, a) if a.shape == b.shape else b,
-            s, new_s)
+        # freeze optimizer state too when inactive: gate EVERY leaf by
+        # broadcasting the scalar mask — a shape-conditional gate would let
+        # mismatched leaves (e.g. scalar step counters) silently advance,
+        # and a woken client would resume with wrong Adam bias correction
+        new_s = jax.tree.map(lambda a, b: jnp.where(on, b, a), s, new_s)
         return new_p, new_s, loss
 
     return jax.vmap(one)(params, opt_state, batch_x, batch_y, targets,

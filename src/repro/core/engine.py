@@ -131,6 +131,9 @@ class FederationConfig:
     local_steps: int = 1
     eval_every: int = 10
     backend: Optional[str] = None   # kernel backend for ALL server math
+    delta_graph: bool = False       # incremental O(u·N) server graph
+    # updates from the div_cache (policies that support it); off by
+    # default — the full rebuild is the bit-exact oracle
     verbose: bool = False
 
     def __post_init__(self):
@@ -245,7 +248,8 @@ class FederationEngine:
         self.clients = ClientRuntime(federation, self.policy, self.config)
         self.bus = ServerBus(federation, self.policy,
                              trigger="every-upload",
-                             backend=self.config.backend)
+                             backend=self.config.backend,
+                             delta=self.config.delta_graph)
 
     # -- convenience views -------------------------------------------------
     @property
@@ -373,7 +377,8 @@ class AsyncFederationEngine:
         self.clients = ClientRuntime(federation, self.policy, self.config)
         self.bus = ServerBus(federation, self.policy,
                              trigger=as_trigger(trigger),
-                             backend=self.config.backend)
+                             backend=self.config.backend,
+                             delta=self.config.delta_graph)
         self._seeded_until = -1.0
 
     # -- convenience views -------------------------------------------------

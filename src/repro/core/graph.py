@@ -9,10 +9,12 @@ the collaboration graph.
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.quality import BIG
 
@@ -22,6 +24,80 @@ class CollaborationGraph(NamedTuple):
     weights: jnp.ndarray         # (N, N) fp32 row-stochastic selection matrix
     similarity: jnp.ndarray      # (N, N) fp32 c_nm (the C matrix of Def. 5)
     candidates: jnp.ndarray      # (N,) bool — the Q pool
+    divergence: Optional[jnp.ndarray] = None  # (N,N) fp32 Eq.2 matrix this
+    # graph was built from; policies that compute it surface it here so
+    # update_state can persist it as ServerState.div_cache (delta path)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _select_pool(similarity: jnp.ndarray, pool: jnp.ndarray,
+                 pool_valid: jnp.ndarray, k: int):
+    """Top-k over the candidate POOL columns only: O(N·Q·log k) instead of
+    O(N²·log k) — at 10k clients the pool is what bounds the cost."""
+    n = similarity.shape[0]
+    sub = similarity[:, pool]                               # (N, B)
+    rowidx = jnp.arange(n, dtype=pool.dtype)[:, None]
+    # padded slots and self-edges are unrealizable
+    sub = jnp.where(pool_valid[None, :] & (pool[None, :] != rowidx),
+                    sub, -BIG)
+    return _topk_weights(sub, pool, k)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _select_pool_div(div: jnp.ndarray, pool: jnp.ndarray,
+                     pool_valid: jnp.ndarray, k: int):
+    """Fused Def.4+5 from the divergence matrix: one compiled call emits
+    the similarity matrix AND the pool top-k selection — the elementwise
+    similarity transform rides the same pass instead of materializing an
+    extra (N,N) intermediate between two dispatches (the nested
+    _select_pool jit inlines here)."""
+    from repro.core.similarity import EPS
+    n = div.shape[0]
+    c = 1.0 / jnp.maximum(div, EPS)
+    i = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+    j = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+    sim = c * (i != j).astype(c.dtype)
+    nbrs, w = _select_pool(sim, pool, pool_valid, k)
+    return sim, nbrs, w
+
+
+def _topk_weights(sub: jnp.ndarray, pool: jnp.ndarray, k: int):
+    """(N,B) masked pool scores -> ((N,K) neighbors, (N,N) weights)."""
+    n = sub.shape[0]
+    top_vals, top_sub = jax.lax.top_k(sub, k)               # (N, K)
+    nbrs = pool[top_sub].astype(jnp.int32)
+    valid = top_vals > -BIG / 2                             # realized edges
+    # row-normalize BEFORE the scatter: per-row 1/count on the realized
+    # edges costs O(N·K), versus sum+divide passes over the (N,N) matrix
+    count = jnp.sum(valid.astype(jnp.float32), axis=1, keepdims=True)
+    vals = valid.astype(jnp.float32) / jnp.maximum(count, 1.0)
+    w = jnp.zeros((n, n), jnp.float32)
+    rows = jnp.repeat(jnp.arange(n), k)
+    w = w.at[rows, nbrs.reshape(-1)].add(vals.reshape(-1))
+    return nbrs, w
+
+
+def _pool_bucket(candidates, k: int):
+    """Candidate mask -> (padded pool indices, validity) or None if the
+    pool is empty. Power-of-two padding keeps jit compiles per-bucket."""
+    pool = np.nonzero(np.asarray(candidates, bool))[0].astype(np.int32)
+    if pool.size == 0 or k == 0:
+        return None
+    bucket = max(1 << (pool.size - 1).bit_length(), k)
+    pool_valid = np.arange(bucket) < pool.size
+    return (jnp.asarray(np.pad(pool, (0, bucket - pool.size))),
+            jnp.asarray(pool_valid))
+
+
+def _select_dense(similarity: jnp.ndarray, candidates: jnp.ndarray, k: int):
+    """Jit-traceable fallback: top-k over all N columns with non-candidates
+    masked to -BIG (the pre-pool algorithm; O(N²) but tracer-safe)."""
+    n = similarity.shape[0]
+    scores = jnp.where(candidates[None, :], similarity, -BIG)
+    i = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+    j = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+    scores = jnp.where(i == j, -2 * BIG, scores)
+    return _topk_weights(scores, jnp.arange(n, dtype=jnp.int32), k)
 
 
 def select_neighbors(similarity: jnp.ndarray, candidates: jnp.ndarray,
@@ -31,21 +107,58 @@ def select_neighbors(similarity: jnp.ndarray, candidates: jnp.ndarray,
     Clients outside Q still get K neighbors (paper: 'any client, regardless
     of its quality, is assigned K neighbors'). A client never selects
     itself. If fewer than K candidates exist, the selection matrix row is
-    renormalized over the realized edges."""
+    renormalized over the realized edges.
+
+    Only the Q candidate columns are ever eligible, so the top-k runs over
+    the (N, Q) pool sub-matrix, not all N² scores. The pool index set is
+    padded to a power-of-two bucket (padded slots scored -BIG) so the
+    jitted kernel compiles once per bucket, not once per pool size. The
+    pool extraction needs concrete values; under an outer jit trace the
+    dense O(N²) path keeps the function traceable."""
     n = similarity.shape[0]
     k = min(k, n - 1)
-    # score = similarity, with non-candidates and self at -inf
-    scores = jnp.where(candidates[None, :], similarity, -BIG)
-    scores = scores - 2 * BIG * jnp.eye(n, dtype=scores.dtype)
-    top_vals, top_idx = jax.lax.top_k(scores, k)             # (N, K)
-    valid = top_vals > -BIG / 2                              # realized edges
-    w = jnp.zeros((n, n), jnp.float32)
-    rows = jnp.repeat(jnp.arange(n), k)
-    w = w.at[rows, top_idx.reshape(-1)].add(valid.reshape(-1).astype(jnp.float32))
-    denom = jnp.maximum(w.sum(axis=1, keepdims=True), 1.0)
-    w = w / denom
-    return CollaborationGraph(neighbors=top_idx, weights=w,
+    if isinstance(candidates, jax.core.Tracer):
+        nbrs, w = _select_dense(similarity, candidates, k)
+        return CollaborationGraph(neighbors=nbrs, weights=w,
+                                  similarity=similarity,
+                                  candidates=candidates)
+    bucket = _pool_bucket(candidates, k)
+    if bucket is None:
+        return CollaborationGraph(
+            neighbors=jnp.zeros((n, k), jnp.int32),
+            weights=jnp.zeros((n, n), jnp.float32),
+            similarity=similarity, candidates=candidates)
+    nbrs, w = _select_pool(similarity, *bucket, k)
+    return CollaborationGraph(neighbors=nbrs, weights=w,
                               similarity=similarity, candidates=candidates)
+
+
+def select_neighbors_from_div(divergence: jnp.ndarray, candidates: jnp.ndarray,
+                              k: int) -> CollaborationGraph:
+    """``select_neighbors`` fused with the Def.4 similarity transform:
+    takes the (N,N) divergence matrix, emits the graph with both
+    ``similarity`` and ``divergence`` populated in a single compiled
+    call — the hot path for SQMD server rounds at large N."""
+    n = divergence.shape[0]
+    k = min(k, n - 1)
+    if isinstance(candidates, jax.core.Tracer):
+        from repro.core.similarity import similarity_matrix
+        sim = similarity_matrix(divergence)
+        nbrs, w = _select_dense(sim, candidates, k)
+        return CollaborationGraph(neighbors=nbrs, weights=w, similarity=sim,
+                                  candidates=candidates,
+                                  divergence=divergence)
+    bucket = _pool_bucket(candidates, k)
+    if bucket is None:
+        from repro.core.similarity import similarity_matrix
+        return CollaborationGraph(
+            neighbors=jnp.zeros((n, k), jnp.int32),
+            weights=jnp.zeros((n, n), jnp.float32),
+            similarity=similarity_matrix(divergence), candidates=candidates,
+            divergence=divergence)
+    sim, nbrs, w = _select_pool_div(divergence, *bucket, k)
+    return CollaborationGraph(neighbors=nbrs, weights=w, similarity=sim,
+                              candidates=candidates, divergence=divergence)
 
 
 def fedmd_graph(active: jnp.ndarray) -> CollaborationGraph:
@@ -63,19 +176,32 @@ def fedmd_graph(active: jnp.ndarray) -> CollaborationGraph:
 def ddist_graph(key, n: int, k: int, active: Optional[jnp.ndarray] = None
                 ) -> CollaborationGraph:
     """D-Dist baseline: a STATIC random K-neighbor graph drawn once at
-    setup (Bistritz et al. 2020); no server-side filtering."""
+    setup (Bistritz et al. 2020); no server-side filtering.
+
+    k is clamped per-row to the realized candidate count (active,
+    non-self): a sparse federation never samples inactive neighbors, and a
+    federation with zero active clients yields an all-zero (NaN-free)
+    selection matrix. Rows renormalize over the realized edges, exactly
+    like ``select_neighbors``."""
     if active is None:
         active = jnp.ones((n,), bool)
     k = min(k, n - 1)
-    # sample K distinct non-self neighbors per row
+
+    # Gumbel top-k == uniform sampling without replacement over the
+    # positive-probability candidates; -inf scores mark unrealizable slots.
     def row(key_i, i):
         p = jnp.where(jnp.arange(n) == i, 0.0, active.astype(jnp.float32))
-        return jax.random.choice(key_i, n, (k,), replace=False, p=p / p.sum())
+        scores = jax.random.gumbel(key_i, (n,)) + jnp.log(p)
+        vals, idx = jax.lax.top_k(scores, k)
+        return idx, jnp.isfinite(vals)
+
     keys = jax.random.split(key, n)
-    nbrs = jax.vmap(row)(keys, jnp.arange(n)).astype(jnp.int32)
+    nbrs, valid = jax.vmap(row)(keys, jnp.arange(n))
+    nbrs = nbrs.astype(jnp.int32)
     w = jnp.zeros((n, n), jnp.float32)
     rows = jnp.repeat(jnp.arange(n), k)
-    w = w.at[rows, nbrs.reshape(-1)].add(1.0 / k)
+    w = w.at[rows, nbrs.reshape(-1)].add(valid.reshape(-1).astype(jnp.float32))
+    w = w / jnp.maximum(w.sum(axis=1, keepdims=True), 1.0)
     sim = jnp.zeros((n, n), jnp.float32)
     return CollaborationGraph(neighbors=nbrs, weights=w, similarity=sim,
                               candidates=active)

@@ -145,6 +145,15 @@ class ServerPolicy(abc.ABC):
                     backend: Optional[str] = None):
         """CollaborationGraph for this round (the policy's whole point)."""
 
+    def build_graph_delta(self, state, quality: jnp.ndarray, uploaded, *,
+                          backend: Optional[str] = None):
+        """Incremental variant: ``uploaded`` is the (N,) bool mask of every
+        repository row that changed since the last policy round. Policies
+        whose round cost scales with the population (sqmd's O(N²·R·C)
+        divergence matrix) override this to pay only O(u·N); the default
+        ignores the mask and rebuilds — always correct, never required."""
+        return self.build_graph(state, quality, backend=backend)
+
     def emit_targets(self, state, graph, *,
                      backend: Optional[str] = None) -> jnp.ndarray:
         """(N,R,C) fp32 probability targets: the K^n neighbor mean."""
@@ -154,8 +163,13 @@ class ServerPolicy(abc.ABC):
     # -- state fold-in -----------------------------------------------------
     def update_state(self, state, quality: jnp.ndarray, graph):
         """Fold this round's results into the ServerState. Policies that do
-        not compute similarity keep the previous ``sim`` matrix."""
+        not compute similarity keep the previous ``sim`` matrix; a graph
+        carrying the divergence it was built from refreshes ``div_cache``
+        (both the full rebuild and the delta scatter produce it, so the
+        cache always matches the current repository)."""
         sim = graph.similarity if self.computes_similarity else state.sim
+        div = (graph.divergence if graph.divergence is not None
+               else state.div_cache)
         return state._replace(quality=quality, sim=sim,
-                              weights=graph.weights,
+                              weights=graph.weights, div_cache=div,
                               round=state.round + 1)

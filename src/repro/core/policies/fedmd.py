@@ -16,4 +16,6 @@ class FedMDPolicy(ServerPolicy):
 
     def build_graph(self, state, quality: jnp.ndarray, *,
                     backend: Optional[str] = None):
+        # already O(N) per round: the base build_graph_delta fallback
+        # (ignore the uploaded mask, rebuild) IS FedMD's delta path
         return graph_mod.fedmd_graph(state.active)

@@ -20,8 +20,20 @@ class SQMDPolicy(ServerPolicy):
 
     def build_graph(self, state, quality: jnp.ndarray, *,
                     backend: Optional[str] = None):
+        div = sim_mod.divergence_matrix(state.repo_logp, backend=backend)
+        return self._select(state, quality, div)
+
+    def build_graph_delta(self, state, quality: jnp.ndarray, uploaded, *,
+                          backend: Optional[str] = None):
+        """O(u·N·R·C) round: scatter the uploaded rows' divergence strips
+        into the cached matrix instead of rebuilding all N² pairs."""
+        div = sim_mod.update_divergence_cache(state.div_cache,
+                                              state.repo_logp, uploaded,
+                                              backend=backend)
+        return self._select(state, quality, div)
+
+    def _select(self, state, quality: jnp.ndarray, div: jnp.ndarray):
         cand = quality_mod.candidate_mask(quality, state.active,
                                           self.protocol.q)
-        div = sim_mod.divergence_matrix(state.repo_logp, backend=backend)
-        sim = sim_mod.similarity_matrix(div)
-        return graph_mod.select_neighbors(sim, cand, self.protocol.k)
+        return graph_mod.select_neighbors_from_div(div, cand,
+                                                   self.protocol.k)

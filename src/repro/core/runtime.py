@@ -298,15 +298,23 @@ class ServerBus:
     stale value (merged, never dropped) — then asks the trigger whether to
     run ``policy_round``. ``tick`` is the wall-interval hook. Staleness of
     every repository row (virtual age of its newest merge) is summarized
-    at each fire and at eval time."""
+    at each fire and at eval time.
+
+    ``delta=True`` hands each fire the accumulated fresh-uploader mask so
+    the policy can take its incremental O(u·N) graph update
+    (``build_graph_delta``) instead of the O(N²) full rebuild —
+    ``fresh_since_fire`` is exactly the set of repository rows that
+    changed since the cache was last valid. Off by default: the full
+    rebuild stays the bit-exact oracle."""
 
     def __init__(self, federation, policy, trigger: Union[None, str,
                                                           Trigger] = None,
-                 backend: Optional[str] = None):
+                 backend: Optional[str] = None, delta: bool = False):
         self.fed = federation
         self.policy = policy
         self.trigger = as_trigger(trigger)
         self.backend = backend
+        self.delta = bool(delta)
         n = federation.n_clients
         self.last_upload_t = np.full(n, -np.inf)
         self.uploads_since_fire = 0                 # rows merged
@@ -355,8 +363,10 @@ class ServerBus:
     def fire(self, t: float) -> None:
         """Run policy_round now: grade -> build graph -> emit targets."""
         fed = self.fed
+        uploaded = self.fresh_since_fire.copy() if self.delta else None
         fed.server, fed.targets, self.last_graph = policy_round(
-            fed.server, self.policy, fed.ref_y, backend=self.backend)
+            fed.server, self.policy, fed.ref_y, backend=self.backend,
+            uploaded=uploaded)
         self.n_triggers += 1
         self.last_staleness = self.staleness(t)
         self.uploads_since_fire = 0

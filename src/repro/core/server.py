@@ -7,6 +7,9 @@ State (a pytree — jit-able end to end):
   sim       (N,N)    latest similarity matrix C (Def. 5)
   weights   (N,N)    current collaboration-graph selection matrix W
   round     ()       round counter
+  div_cache (N,N)    cached Eq.2 divergence matrix of the CURRENT
+                     repository — the delta path scatters u×N / N×u strips
+                     into it per trigger instead of rebuilding O(N²·R·C)
 
 ``server_round`` consumes freshly uploaded messengers, updates the
 repository, re-grades, rebuilds the dynamic graph per the protocol, and
@@ -30,6 +33,7 @@ class ServerState(NamedTuple):
     sim: jnp.ndarray
     weights: jnp.ndarray
     round: jnp.ndarray
+    div_cache: jnp.ndarray
 
 
 def init_server(n_clients: int, ref_size: int, n_classes: int) -> ServerState:
@@ -44,6 +48,9 @@ def init_server(n_clients: int, ref_size: int, n_classes: int) -> ServerState:
         sim=jnp.zeros((n_clients, n_clients), jnp.float32),
         weights=jnp.zeros((n_clients, n_clients), jnp.float32),
         round=jnp.zeros((), jnp.int32),
+        # the all-uniform repository has KL(p||p) = 0 everywhere, so the
+        # zero matrix IS the exact divergence of the initial repository
+        div_cache=jnp.zeros((n_clients, n_clients), jnp.float32),
     )
 
 
@@ -85,14 +92,24 @@ def staleness_summary(last_upload_t: np.ndarray, active: np.ndarray,
 
 
 def policy_round(state: ServerState, policy, ref_labels: jnp.ndarray,
-                 backend: Optional[str] = None):
+                 backend: Optional[str] = None,
+                 uploaded: Optional[np.ndarray] = None):
     """Lines 7–10, policy-agnostic: grade -> build graph -> emit targets.
 
     ``policy`` is a resolved ServerPolicy instance. Returns
     (new_state, targets (N,R,C) fp32, CollaborationGraph) — the graph is
-    what the engine's metrics/graph-stats read."""
+    what the engine's metrics/graph-stats read.
+
+    ``uploaded``, when given, is the boolean (N,) mask of every repository
+    row that changed since the last policy round: the policy may then take
+    its incremental O(u·N) graph-update path (``build_graph_delta``)
+    instead of the O(N²) full rebuild. ``uploaded=None`` (the default, and
+    the legacy ``server_round`` contract) always rebuilds from scratch."""
     g = policy.grade(state, ref_labels, backend=backend)
-    graph = policy.build_graph(state, g, backend=backend)
+    if uploaded is None:
+        graph = policy.build_graph(state, g, backend=backend)
+    else:
+        graph = policy.build_graph_delta(state, g, uploaded, backend=backend)
     targets = policy.emit_targets(state, graph, backend=backend)
     return policy.update_state(state, g, graph), targets, graph
 

@@ -3,12 +3,22 @@
 d_nm = (1/R) Σ_j KL(s^n_j || s^m_j) — asymmetric; similarity c_nm = 1/d_nm.
 The (N,N) divergence matrix is the server's O(N²RC) hot spot → Pallas
 kernel (kernels/pairwise_kl.py).
+
+``update_divergence_cache`` is the incremental path: after u fresh uploads
+only row-strip D[u,:] and column-strip D[:,u] change, so the server pays
+O(u·N·R·C) per trigger instead of the O(N²·R·C) full rebuild. Rows are
+padded up to power-of-two buckets (repeating the last row — duplicate
+scatters write identical values) so the strip kernel compiles once per
+bucket, not once per distinct upload count.
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ops
 
@@ -21,9 +31,86 @@ def divergence_matrix(messengers_logp: jnp.ndarray,
     return ops.pairwise_kl(messengers_logp, backend=backend)
 
 
+def _bucket_rows(rows: np.ndarray) -> np.ndarray:
+    """Pad the updated-row index set up to the next power of two by
+    repeating the last index — a no-op for the scatter, a cache hit for
+    the jit'd strip kernel."""
+    u = len(rows)
+    size = 1 << (u - 1).bit_length() if u > 1 else 1
+    return np.concatenate([rows, np.full(size - u, rows[-1], rows.dtype)])
+
+
+@jax.jit
+def _scatter_strips(cache: jnp.ndarray, rows: jnp.ndarray,
+                    row_strip: jnp.ndarray,
+                    col_strip: jnp.ndarray) -> jnp.ndarray:
+    cache = cache.astype(jnp.float32)
+    cache = cache.at[rows, :].set(row_strip)
+    return cache.at[:, rows].set(col_strip)
+
+
+@functools.partial(jax.jit, static_argnames=("r",))
+def _delta_update(cache: jnp.ndarray, lp: jnp.ndarray, rows: jnp.ndarray,
+                  r: int) -> jnp.ndarray:
+    """Fused jnp delta path: strips + scatter in one compiled call (the
+    eager composition pays several O(N²) temporaries; fused it is one
+    O(u·N·R·C) matmul pair plus one cache copy)."""
+    fresh_l = lp[rows]
+    fresh_p = jnp.exp(fresh_l)
+    p = jnp.exp(lp)
+    row_strip = (jnp.sum(fresh_p * fresh_l, axis=-1)[:, None]
+                 - fresh_p @ lp.T) / r                      # (u, N)
+    col_strip = (jnp.sum(p * lp, axis=-1)[:, None]
+                 - p @ fresh_l.T) / r                       # (N, u)
+    return _scatter_strips(cache, rows, row_strip, col_strip)
+
+
+def update_divergence_cache(cache: jnp.ndarray, messengers_logp: jnp.ndarray,
+                            uploaded, backend: Optional[str] = None
+                            ) -> jnp.ndarray:
+    """Scatter the divergence strips of freshly-uploaded rows into the
+    cached (N,N) matrix.
+
+    ``uploaded`` is a boolean (N,) mask of every row whose repository
+    entry changed since ``cache`` was built. Rows outside it are assumed
+    untouched — the ServerBus accumulates the mask across deliveries
+    between trigger fires. Returns the updated (N,N) fp32 matrix, equal
+    (to fp32 tolerance) to a full rebuild."""
+    uploaded = np.asarray(uploaded)
+    if uploaded.dtype != bool:
+        # a 0/1 integer array is ambiguous (mask or index list?) — demand
+        # the mask form rather than silently updating the wrong rows
+        raise TypeError(f"uploaded must be a boolean mask, got dtype "
+                        f"{uploaded.dtype}")
+    rows = np.nonzero(uploaded)[0]
+    if rows.size == 0:
+        return cache
+    if rows.size >= messengers_logp.shape[0]:
+        return divergence_matrix(messengers_logp, backend=backend)
+    rows = jnp.asarray(_bucket_rows(rows))
+    backend = backend or ops.default_backend()
+    if backend == "jnp":
+        n, r, c = messengers_logp.shape
+        lp = messengers_logp.astype(jnp.float32).reshape(n, r * c)
+        return _delta_update(cache, lp, rows, r)
+    fresh = messengers_logp[rows]
+    row_strip = ops.pairwise_kl_pair(fresh, messengers_logp,
+                                     backend=backend)       # (u, N)
+    col_strip = ops.pairwise_kl_pair(messengers_logp, fresh,
+                                     backend=backend)       # (N, u)
+    return _scatter_strips(cache, rows, row_strip, col_strip)
+
+
+@jax.jit
 def similarity_matrix(divergence: jnp.ndarray) -> jnp.ndarray:
     """c_nm = 1 / d_nm (paper Def. 4). Diagonal forced to 0 so a client is
-    never its own neighbor; numerical floor keeps identical twins finite."""
+    never its own neighbor; numerical floor keeps identical twins finite.
+
+    Jitted: one fused pass over the (N,N) matrix — at N=10k the eager
+    chain (maximum, reciprocal, eye, multiply) costs several 400MB
+    temporaries."""
     c = 1.0 / jnp.maximum(divergence, EPS)
     n = c.shape[0]
-    return c * (1.0 - jnp.eye(n, dtype=c.dtype))
+    i = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+    j = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+    return c * (i != j).astype(c.dtype)

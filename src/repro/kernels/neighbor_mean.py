@@ -9,10 +9,13 @@ S, so tiles of W stay resident while S streams through.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.pairwise_kl import default_interpret
 
 DEFAULT_BN = 128
 DEFAULT_BJ = 128
@@ -35,8 +38,13 @@ def _kernel(w_ref, s_ref, out_ref):
 @functools.partial(jax.jit, static_argnames=("bn", "bj", "bk", "interpret"))
 def neighbor_mean(w: jnp.ndarray, probs: jnp.ndarray, bn: int = DEFAULT_BN,
                   bj: int = DEFAULT_BJ, bk: int = DEFAULT_BK,
-                  interpret: bool = True) -> jnp.ndarray:
-    """w (N,N) selection weights, probs (N,R,C) -> targets (N,R,C) fp32."""
+                  interpret: Optional[bool] = None) -> jnp.ndarray:
+    """w (N,N) selection weights, probs (N,R,C) -> targets (N,R,C) fp32.
+
+    ``interpret`` defaults from the platform (compiled on TPU, interpreter
+    elsewhere)."""
+    if interpret is None:       # static arg: resolved at trace time
+        interpret = default_interpret()
     n, r, c = probs.shape
     s = probs.reshape(n, r * c)
     rc = r * c

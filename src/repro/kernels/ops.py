@@ -41,13 +41,49 @@ def set_default_backend(name: str) -> None:
     _DEFAULT_BACKEND = name
 
 
+# Above this many rows the square divergence rebuild streams row-block
+# strips instead of one monolithic call, bounding the padded/exp'd
+# intermediates each call materializes (VMEM/HBM safety at N=10k).
+CHUNK_ROWS = 2048
+
+
 def pairwise_kl(logp: jnp.ndarray, backend: Optional[str] = None,
-                **blocks) -> jnp.ndarray:
-    """Eq.2 divergence matrix. logp (N,R,C) -> (N,N) fp32."""
+                row_block: Optional[int] = None, **blocks) -> jnp.ndarray:
+    """Eq.2 divergence matrix. logp (N,R,C) -> (N,N) fp32.
+
+    Large repositories (N > CHUNK_ROWS, or any N with ``row_block`` set)
+    are computed by k-strip streaming over row blocks — each block is an
+    independent u×N strip, so per-call intermediates stay bounded."""
+    n = logp.shape[0]
+    if row_block is None and n > CHUNK_ROWS:
+        row_block = CHUNK_ROWS
+    if row_block is not None and row_block < n:
+        strips = [pairwise_kl_pair(logp[i:i + row_block], logp,
+                                   backend=backend, **blocks)
+                  for i in range(0, n, row_block)]
+        return jnp.concatenate(strips, axis=0)
     backend = backend or default_backend()
     if backend == "jnp":
         return _ref.pairwise_kl_ref(logp)
     return _pk.pairwise_kl(logp, interpret=(backend == "interpret"), **blocks)
+
+
+# strips are hot-path (delta rounds, chunked rebuilds): jit the oracle so
+# the exp/rowterm chain fuses instead of materializing eager temporaries
+_pair_ref_jit = jax.jit(_ref.pairwise_kl_pair_ref)
+
+
+def pairwise_kl_pair(logp_a: jnp.ndarray, logp_b: jnp.ndarray,
+                     backend: Optional[str] = None, **blocks) -> jnp.ndarray:
+    """Rectangular Eq.2 strip: logp_a (U,R,C), logp_b (M,R,C) -> (U,M).
+
+    The delta-update primitive: after u uploads only the u×N and N×u
+    strips of the divergence matrix change."""
+    backend = backend or default_backend()
+    if backend == "jnp":
+        return _pair_ref_jit(logp_a, logp_b)
+    return _pk.pairwise_kl_pair(logp_a, logp_b,
+                                interpret=(backend == "interpret"), **blocks)
 
 
 def soft_ce(logits: jnp.ndarray, labels: jnp.ndarray,

@@ -26,6 +26,23 @@ def pairwise_kl_ref(logp: jnp.ndarray) -> jnp.ndarray:
     return (rowterm[:, None] - cross) / r
 
 
+def pairwise_kl_pair_ref(logp_a: jnp.ndarray,
+                         logp_b: jnp.ndarray) -> jnp.ndarray:
+    """Rectangular Eq. 2 strip: D[a,b] = (1/R) sum_j KL(A_a_j || B_b_j).
+
+    logp_a (U,R,C), logp_b (M,R,C) -> (U,M). The square matrix is the
+    A == B special case; the delta path computes only the u×N / N×u strips
+    touched by u fresh uploads.
+    """
+    u, r, c = logp_a.shape
+    la = logp_a.astype(jnp.float32).reshape(u, r * c)
+    lb = logp_b.astype(jnp.float32).reshape(logp_b.shape[0], r * c)
+    pa = jnp.exp(la)
+    rowterm = jnp.sum(pa * la, axis=-1)                     # (U,)
+    cross = pa @ lb.T                                       # (U,M)
+    return (rowterm[:, None] - cross) / r
+
+
 def soft_ce_ref(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
     """Eq. 1 quality: g[n] = sum_i H(softmax(logits[n,i]), y_i).
 

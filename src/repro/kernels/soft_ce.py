@@ -10,10 +10,13 @@ sums in the output tile. Never materializes fp32 (N,R,C) in HBM.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.pairwise_kl import default_interpret
 
 DEFAULT_BN = 8
 DEFAULT_BR = 256
@@ -42,8 +45,14 @@ def _kernel(z_ref, y_ref, out_ref):
 
 @functools.partial(jax.jit, static_argnames=("bn", "br", "interpret"))
 def soft_ce(logits: jnp.ndarray, labels: jnp.ndarray, bn: int = DEFAULT_BN,
-            br: int = DEFAULT_BR, interpret: bool = True) -> jnp.ndarray:
-    """logits (N,R,C), labels (R,) int32 -> quality losses (N,) fp32."""
+            br: int = DEFAULT_BR,
+            interpret: Optional[bool] = None) -> jnp.ndarray:
+    """logits (N,R,C), labels (R,) int32 -> quality losses (N,) fp32.
+
+    ``interpret`` defaults from the platform (compiled on TPU, interpreter
+    elsewhere)."""
+    if interpret is None:       # static arg: resolved at trace time
+        interpret = default_interpret()
     n, r, c = logits.shape
     bn = min(bn, n)
     br = min(br, r)

@@ -87,6 +87,9 @@ def main() -> None:
     ap.add_argument("--local-steps", type=int, default=1)
     ap.add_argument("--eval-every", type=int, default=5)
     ap.add_argument("--backend", choices=("pallas", "interpret", "jnp"))
+    ap.add_argument("--delta", action="store_true",
+                    help="incremental O(u·N) server graph updates from the "
+                         "divergence cache (vs full O(N^2) rebuild)")
     ap.add_argument("--rho", type=float, default=0.8)
     ap.add_argument("--q", type=int, default=16)
     ap.add_argument("--k", type=int, default=8)
@@ -138,7 +141,8 @@ def main() -> None:
     config = FederationConfig(rounds=args.rounds, batch_size=args.batch,
                               local_steps=args.local_steps,
                               eval_every=args.eval_every,
-                              backend=args.backend, verbose=True)
+                              backend=args.backend,
+                              delta_graph=args.delta, verbose=True)
     t0 = time.time()
     if args.clock == "event":
         arrivals = make_arrivals(args, ds.n_clients, args.rounds)

@@ -17,6 +17,13 @@ from repro.optim import sgd
 SMOKE_SHAPE = dataclasses.replace(INPUT_SHAPES["train_4k"], seq_len=32,
                                   global_batch=2)
 
+# the biggest reduced variants cost 8-20s PER test on CPU (4 tests each):
+# slow-marked; the remaining families keep every code path smoke-covered
+_SLOW_ARCHS = {"gemma3-1b", "recurrentgemma-9b", "deepseek-v2-236b",
+               "internvl2-76b", "mixtral-8x7b", "mamba2-780m"}
+_ARCH_PARAMS = [pytest.param(a, marks=pytest.mark.slow)
+                if a in _SLOW_ARCHS else a for a in ARCH_IDS]
+
 
 @pytest.fixture(scope="module")
 def smoke_state():
@@ -32,7 +39,7 @@ def _setup(aid):
     return cfg, params, batch
 
 
-@pytest.mark.parametrize("aid", ARCH_IDS)
+@pytest.mark.parametrize("aid", _ARCH_PARAMS)
 def test_forward_shapes_and_no_nans(aid):
     cfg, params, batch = _setup(aid)
     logits, aux = forward(params, cfg, tokens=batch["tokens"],
@@ -44,7 +51,7 @@ def test_forward_shapes_and_no_nans(aid):
     assert bool(jnp.isfinite(logits).all()), f"{aid}: non-finite logits"
 
 
-@pytest.mark.parametrize("aid", ARCH_IDS)
+@pytest.mark.parametrize("aid", _ARCH_PARAMS)
 def test_one_train_step(aid):
     cfg, params, batch = _setup(aid)
     opt = sgd(0.01)
@@ -58,7 +65,7 @@ def test_one_train_step(aid):
     assert moved, f"{aid}: train step was a no-op"
 
 
-@pytest.mark.parametrize("aid", ARCH_IDS)
+@pytest.mark.parametrize("aid", _ARCH_PARAMS)
 def test_serve_step_one_token(aid):
     cfg = get_reduced(aid)
     params = init_params(jax.random.key(0), cfg)
@@ -73,7 +80,7 @@ def test_serve_step_one_token(aid):
     assert bool(jnp.isfinite(logits).all()), f"{aid}: NaN decode logits"
 
 
-@pytest.mark.parametrize("aid", ARCH_IDS)
+@pytest.mark.parametrize("aid", _ARCH_PARAMS)
 def test_empty_cache_decode(aid):
     """Decode from a fresh (pos=0) cache — the decode_32k dry-run contract."""
     cfg = get_reduced(aid)

@@ -22,7 +22,10 @@ from repro.models.mlp import hetero_mlp_zoo
 
 @pytest.fixture(scope="module")
 def setup():
-    ds = pad_like(samples_per_client=30, ref_size=30, length=24)
+    # deliberately small (CI speed): these tests assert wiring/parity, not
+    # learning quality — the parity tests compare both drivers on the SAME
+    # fixture, so the scale is free to shrink
+    ds = pad_like(samples_per_client=16, ref_size=16, length=16)
     splits = make_splits(ds, seed=0)
     zoo = hetero_mlp_zoo(ds.feature_len, ds.n_classes)
     assignment = [list(zoo)[i % 3] for i in range(ds.n_clients)]

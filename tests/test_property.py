@@ -7,8 +7,9 @@ import pytest
 pytest.importorskip("hypothesis")  # optional dep: skip cleanly if absent
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import (candidate_mask, select_neighbors, similarity_matrix,
-                        divergence_matrix)
+from repro.core import (candidate_mask, divergence_matrix, init_server,
+                        select_neighbors, similarity_matrix,
+                        update_divergence_cache, upload_messengers)
 from repro.core.distill import ref_loss
 from repro.kernels import ref
 
@@ -24,6 +25,34 @@ def test_pairwise_kl_nonneg_zero_diag(dims, seed):
     d = np.asarray(ref.pairwise_kl_ref(logp))
     assert (d >= -1e-4).all()
     assert np.allclose(np.diag(d), 0.0, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(_dims, st.integers(0, 2**31 - 1), st.integers(1, 5))
+def test_div_cache_scatter_matches_full_rebuild(dims, seed, steps):
+    """Delta-path invariant: scatter-updating the cached divergence matrix
+    over ANY upload sequence (empty/partial/full masks, rows that never
+    upload and keep their uniform init) equals a from-scratch rebuild."""
+    n, r, c = dims
+    rng = np.random.default_rng(seed)
+    state = init_server(n, r, c)
+    cache = state.div_cache
+    for i in range(steps):
+        mask = rng.random(n) < rng.uniform(0.0, 1.0)
+        z = jax.random.normal(jax.random.key((seed + i) % 2**31),
+                              (n, r, c)) * 3
+        state = upload_messengers(state, jax.nn.log_softmax(z, -1),
+                                  jnp.asarray(mask))
+        cache = update_divergence_cache(cache, state.repo_logp, mask,
+                                        backend="jnp")
+    full = np.asarray(divergence_matrix(state.repo_logp, backend="jnp"))
+    np.testing.assert_allclose(np.asarray(cache), full, atol=1e-4,
+                               rtol=1e-4)
+    # rows nobody uploaded keep the exact zero-KL uniform block
+    never = ~np.asarray(state.active)
+    if never.any():
+        assert np.allclose(np.asarray(cache)[np.ix_(never, never)], 0.0,
+                           atol=1e-6)
 
 
 @settings(max_examples=25, deadline=None)

@@ -27,7 +27,21 @@ from repro.optim import sgd
 
 @pytest.fixture(scope="module")
 def setup():
+    """EXACTLY the pre-runtime pin fixture — test_sync_parity_pinned's
+    PINNED_* values were captured at this scale; do not shrink."""
     ds = pad_like(samples_per_client=30, ref_size=30, length=24)
+    splits = make_splits(ds, seed=0)
+    zoo = hetero_mlp_zoo(ds.feature_len, ds.n_classes)
+    assignment = [list(zoo)[i % 3] for i in range(ds.n_clients)]
+    return ds, splits, zoo, assignment
+
+
+@pytest.fixture(scope="module")
+def setup_small():
+    """Small fixture for the async-regime and shim-parity tests (they
+    compare engines against each other on the SAME data, so the scale is
+    free to shrink for CI speed)."""
+    ds = pad_like(samples_per_client=16, ref_size=16, length=16)
     splits = make_splits(ds, seed=0)
     zoo = hetero_mlp_zoo(ds.feature_len, ds.n_classes)
     assignment = [list(zoo)[i % 3] for i in range(ds.n_clients)]
@@ -70,10 +84,10 @@ def test_sync_parity_pinned(setup):
     assert h.staleness[-1]["n_stale"] == 0
 
 
-def test_async_shim_matches_sync(setup):
+def test_async_shim_matches_sync(setup_small):
     """ScheduleArrivals + every-upload on the event loop is the sync
     engine: identical trajectories for always-on AND staged-join."""
-    ds, splits, zoo, assignment = setup
+    ds, splits, zoo, assignment = setup_small
     join = [0] * (ds.n_clients - 6) + [2] * 6
     for schedule in (AlwaysOn(), StagedJoin(join)):
         sync = FederationEngine.build(
@@ -94,11 +108,11 @@ def test_async_shim_matches_sync(setup):
                                    rtol=0, atol=1e-9)
 
 
-def test_async_shim_matches_sync_with_empty_rounds(setup):
+def test_async_shim_matches_sync_with_empty_rounds(setup_small):
     """Rounds where NO client is available still burn RNG splits and fire
     the (empty) communication round in the sync engine; the shim must
     reproduce that exactly."""
-    ds, splits, zoo, assignment = setup
+    ds, splits, zoo, assignment = setup_small
     join = [2] * ds.n_clients                  # nobody joins until round 2
     sync = FederationEngine.build(
         ds, splits, zoo, assignment, sqmd(q=8, k=4),
@@ -114,10 +128,10 @@ def test_async_shim_matches_sync_with_empty_rounds(setup):
     assert h_async.server_rounds == h_sync.server_rounds
 
 
-def test_async_rejects_round_synchronous_interval(setup):
+def test_async_rejects_round_synchronous_interval(setup_small):
     """Protocol.interval is round-synchronous; the event engine demands a
     Trigger instead of silently communicating on every wake."""
-    ds, splits, zoo, assignment = setup
+    ds, splits, zoo, assignment = setup_small
     with pytest.raises(ValueError, match="Trigger"):
         AsyncFederationEngine.build(
             ds, splits, zoo, assignment,
@@ -354,10 +368,10 @@ def test_staleness_summary_edges():
 
 # --- async regimes end-to-end ---------------------------------------------
 
-def test_async_straggler_latency_regime(setup):
+def test_async_straggler_latency_regime(setup_small):
     """Slow clients' messengers arrive late but ARE merged: their rows
     leave the uniform init, and eval-time staleness shows their lag."""
-    ds, splits, zoo, assignment = setup
+    ds, splits, zoo, assignment = setup_small
     proc = StragglerLatency(fraction=0.5, delay=2.0, seed=1)
     engine = AsyncFederationEngine.build(
         ds, splits, zoo, assignment, sqmd(q=8, k=4), arrivals=proc,
@@ -375,10 +389,10 @@ def test_async_straggler_latency_regime(setup):
     assert engine.bus.n_uploads > 0
 
 
-def test_async_bursty_arrivals_regime(setup):
+def test_async_bursty_arrivals_regime(setup_small):
     """Bursty arrivals + every-k: the server batches uploads across
     bursts and fires fewer policy rounds than deliveries."""
-    ds, splits, zoo, assignment = setup
+    ds, splits, zoo, assignment = setup_small
     engine = AsyncFederationEngine.build(
         ds, splits, zoo, assignment, sqmd(q=8, k=4),
         arrivals=BurstyArrivals(burst_every=2.0, frac=0.5, jitter=0.8,
@@ -393,10 +407,10 @@ def test_async_bursty_arrivals_regime(setup):
     assert all(s["n"] >= 0 for s in h.staleness)
 
 
-def test_async_quorum_trigger_regime(setup):
+def test_async_quorum_trigger_regime(setup_small):
     """Quorum-triggered server rounds: policy fires only when half the
     federation has freshly uploaded; stale rows still feed the graph."""
-    ds, splits, zoo, assignment = setup
+    ds, splits, zoo, assignment = setup_small
     engine = AsyncFederationEngine.build(
         ds, splits, zoo, assignment, sqmd(q=8, k=4),
         arrivals=StragglerLatency(fraction=0.5, delay=2.0, seed=1),
@@ -409,10 +423,10 @@ def test_async_quorum_trigger_regime(setup):
     assert engine.bus.n_triggers >= 1
 
 
-def test_async_wall_interval_and_resume(setup):
+def test_async_wall_interval_and_resume(setup_small):
     """WallInterval fires on the virtual-time grid, and fit() can be
     called again with a larger horizon to continue the same run."""
-    ds, splits, zoo, assignment = setup
+    ds, splits, zoo, assignment = setup_small
     engine = AsyncFederationEngine.build(
         ds, splits, zoo, assignment, sqmd(q=8, k=4),
         arrivals=HeterogeneousCadence(fast=1.0, slow=3.0, seed=4),
@@ -428,11 +442,11 @@ def test_async_wall_interval_and_resume(setup):
     assert np.isfinite(h.mean_acc).all()
 
 
-def test_async_fit_smaller_horizon_does_not_reseed(setup):
+def test_async_fit_smaller_horizon_does_not_reseed(setup_small):
     """A fit() call with a smaller horizon than a prior call is a no-op
     for seeding: it must not replay already-run events on the next
     larger-horizon call."""
-    ds, splits, zoo, assignment = setup
+    ds, splits, zoo, assignment = setup_small
     engine = AsyncFederationEngine.build(
         ds, splits, zoo, assignment, sqmd(q=8, k=4),
         arrivals=BurstyArrivals(burst_every=2.0, frac=0.5, seed=2),
@@ -447,10 +461,10 @@ def test_async_fit_smaller_horizon_does_not_reseed(setup):
     assert np.isfinite(h.mean_acc).all()
 
 
-def test_async_reference_free_policy(setup):
+def test_async_reference_free_policy(setup_small):
     """isgd (no messengers) still trains under the event loop: no uploads,
     no triggers, finite metrics."""
-    ds, splits, zoo, assignment = setup
+    ds, splits, zoo, assignment = setup_small
     engine = AsyncFederationEngine.build(
         ds, splits, zoo, assignment, isgd(),
         arrivals=BurstyArrivals(burst_every=2.0, frac=0.5, seed=5),
