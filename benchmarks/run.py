@@ -22,6 +22,7 @@ BENCHES = {
     "fig4": "benchmarks.fig4_async",          # Fig. 4     (RQ4)
     "server_kernels": "benchmarks.server_kernels",
     "roofline": "benchmarks.roofline",
+    "wire": "benchmarks.wire",                # messenger codec bytes/fidelity
 }
 
 

@@ -74,7 +74,9 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
 
 def save_federation(ckpt_dir: str, fed, step: int) -> None:
     """Persist the full federation: every cohort's stacked params/opt state
-    + the server state (repository, graph, quality)."""
+    + the server state (repository, graph, quality) + the messenger wire
+    codec names the run was using (so a resumed run speaks the same
+    format)."""
     tree = {
         "server": fed.server._asdict(),
         "cohorts": [{
@@ -83,14 +85,19 @@ def save_federation(ckpt_dir: str, fed, step: int) -> None:
             "params": c.params,
             "opt_state": _optstate_to_tree(c.opt_state),
         } for c in fed.cohorts],
+        "wire": {"uplink": getattr(fed, "uplink", "dense32"),
+                 "downlink": getattr(fed, "downlink", "dense32")},
         "round": step,
     }
     save_pytree(os.path.join(ckpt_dir, f"step_{step}.msgpack"), tree)
 
 
 def restore_federation(ckpt_dir: str, fed, step: Optional[int] = None):
-    """Restore in place; cohort order/families must match."""
+    """Restore in place; cohort order/families must match. Legacy files
+    (written before the wire subsystem) restore as ``dense32`` — the
+    bit-identical pass-through codec they implicitly used."""
     from repro.core.server import ServerState
+    from repro.core.wire import as_codec
     step = step if step is not None else latest_step(ckpt_dir)
     tree = restore_pytree(os.path.join(ckpt_dir, f"step_{step}.msgpack"))
     server = dict(tree["server"])
@@ -101,6 +108,10 @@ def restore_federation(ckpt_dir: str, fed, step: Optional[int] = None):
         from repro.kernels import ops
         server["div_cache"] = ops.pairwise_kl(server["repo_logp"])
     fed.server = ServerState(**server)
+    codecs = tree.get("wire") or {}
+    fed.uplink = codecs.get("uplink", "dense32")
+    fed.downlink = codecs.get("downlink", "dense32")
+    as_codec(fed.uplink), as_codec(fed.downlink)   # names must resolve
     for c, saved in zip(fed.cohorts, tree["cohorts"]):
         assert c.family_name == saved["family"], "cohort layout changed"
         c.params = saved["params"]

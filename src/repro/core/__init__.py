@@ -3,12 +3,9 @@ from repro.core.distill import local_loss, ref_loss, sqmd_grads, sqmd_loss
 from repro.core.engine import (AsyncFederationEngine, Federation,
                                FederationConfig, FederationEngine, History,
                                evaluate, precision_recall)
-from repro.core.federation import (build_federation, run_round,
-                                   train_federation)
 from repro.core.graph import (CollaborationGraph, ddist_graph, fedmd_graph,
                               graph_stats, select_neighbors)
-from repro.core.messenger import (cohort_messengers, make_messenger,
-                                  messenger_bytes)
+from repro.core.messenger import cohort_messengers, make_messenger
 from repro.core.policies import (DDistPolicy, FedMDPolicy, ISGDPolicy,
                                  SQMDPolicy, ServerPolicy, as_policy,
                                  get_policy, register_policy,
@@ -32,11 +29,13 @@ from repro.core.server import (ServerState, init_server, policy_round,
                                upload_messengers)
 from repro.core.similarity import (divergence_matrix, similarity_matrix,
                                    update_divergence_cache)
+from repro.core.wire import (Codec, Payload, as_codec, bytes_per_messenger,
+                             decode, encode, get_codec, payload_bytes,
+                             register_codec, registered_codecs)
 
 __all__ = [
     "local_loss", "ref_loss", "sqmd_grads", "sqmd_loss",
-    "Federation", "History", "build_federation", "evaluate",
-    "precision_recall", "run_round", "train_federation",
+    "Federation", "History", "evaluate", "precision_recall",
     "FederationConfig", "FederationEngine", "AsyncFederationEngine",
     "Clock", "SyncClock", "Event", "ClientRuntime", "ServerBus",
     "Trigger", "EveryUpload", "EveryKUploads", "WallInterval", "Quorum",
@@ -46,7 +45,10 @@ __all__ = [
     "register_arrivals", "registered_arrivals", "staleness_summary",
     "CollaborationGraph", "ddist_graph", "fedmd_graph", "graph_stats",
     "select_neighbors", "cohort_messengers", "make_messenger",
-    "messenger_bytes", "Protocol", "ddist", "fedmd", "isgd", "sqmd",
+    "Codec", "Payload", "as_codec", "bytes_per_messenger", "decode",
+    "encode", "get_codec", "payload_bytes", "register_codec",
+    "registered_codecs",
+    "Protocol", "ddist", "fedmd", "isgd", "sqmd",
     "ServerPolicy", "SQMDPolicy", "FedMDPolicy", "DDistPolicy",
     "ISGDPolicy", "as_policy", "get_policy", "register_policy",
     "registered_policies",

@@ -86,10 +86,15 @@ def cohort_step(apply_fn, optimizer: Optimizer, params, opt_state,
                          trainable)
 
 
-@functools.partial(jax.jit, static_argnames=("apply_fn",))
-def cohort_messenger_upload(apply_fn, params, ref_x) -> jnp.ndarray:
-    """(n_c, R, C) log-prob messengers for the cohort."""
-    return cohort_messengers(apply_fn, params, ref_x)
+@functools.partial(jax.jit, static_argnames=("apply_fn", "codec"))
+def cohort_messenger_upload(apply_fn, params, ref_x, codec=None):
+    """(n_c, R, C) log-prob messengers for the cohort.
+
+    ``codec`` (a hashable ``wire.Codec``, static under jit) encodes the
+    stack ON the client: the forward pass and the wire encode fuse into
+    one compiled call and the return value is the Payload that actually
+    crosses the device boundary. ``None`` keeps the raw-array form."""
+    return cohort_messengers(apply_fn, params, ref_x, codec=codec)
 
 
 @functools.partial(jax.jit, static_argnames=("apply_fn",))
@@ -101,6 +106,20 @@ def cohort_accuracy(apply_fn, params, xs, ys):
         return jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
 
     return jax.vmap(one)(params, xs, ys)
+
+
+@functools.partial(jax.jit, static_argnames=("apply_fn",))
+def cohort_accuracy_masked(apply_fn, params, xs, ys, mask):
+    """Per-client accuracy over UNEQUAL shard lengths: shards are padded
+    to the cohort max and ``mask (n_c, M)`` marks the real samples, so no
+    client's tail is truncated to the shortest shard."""
+
+    def one(p, x, y, m):
+        logits = apply_fn(p, x)
+        hit = (jnp.argmax(logits, -1) == y) & m
+        return hit.sum() / jnp.maximum(m.sum(), 1).astype(jnp.float32)
+
+    return jax.vmap(one)(params, xs, ys, mask)
 
 
 @functools.partial(jax.jit, static_argnames=("apply_fn",))

@@ -36,8 +36,10 @@ Typical use::
         trigger=Quorum(frac=0.5))
     history = async_engine.fit(splits, until=40.0)
 
-The legacy ``build_federation``/``train_federation`` free functions live
-on as deprecation shims in ``repro.core.federation``.
+Messengers travel wire-encoded (``repro.core.wire``): the config's
+``uplink``/``downlink`` codec names pick the format, the ServerBus
+meters the bytes actually paid, and ``History.bytes_up``/``bytes_down``
+expose the cumulative totals for bandwidth-vs-accuracy plots.
 """
 from __future__ import annotations
 
@@ -50,7 +52,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import graph as graph_mod
-from repro.core.client import Cohort, cohort_accuracy, make_cohort
+from repro.core import wire
+from repro.core.client import (Cohort, cohort_accuracy,
+                               cohort_accuracy_masked, make_cohort)
 from repro.core.policies import ServerPolicy, as_policy
 from repro.core.protocols import Protocol
 from repro.core.runtime import (ClientRuntime, Clock, ServerBus, SyncClock,
@@ -69,7 +73,11 @@ class History:
     nearest virtual tick (async); ``times`` the virtual eval time, so
     async plots can show accuracy vs. virtual time, not just rounds.
     ``server_rounds`` counts policy rounds the ServerBus has fired by each
-    eval; ``staleness`` the repository staleness histogram then."""
+    eval; ``staleness`` the repository staleness histogram then.
+    ``bytes_up``/``bytes_down`` are the CUMULATIVE wire bytes the
+    federation has paid by each eval (summed over clients, metered by the
+    ServerBus per encoded payload) — the x-axis of
+    bandwidth-vs-accuracy plots."""
     rounds: List[int] = dataclasses.field(default_factory=list)
     mean_acc: List[float] = dataclasses.field(default_factory=list)
     per_client_acc: List[np.ndarray] = dataclasses.field(default_factory=list)
@@ -79,6 +87,8 @@ class History:
     times: List[float] = dataclasses.field(default_factory=list)
     server_rounds: List[int] = dataclasses.field(default_factory=list)
     staleness: List[dict] = dataclasses.field(default_factory=list)
+    bytes_up: List[float] = dataclasses.field(default_factory=list)
+    bytes_down: List[float] = dataclasses.field(default_factory=list)
 
     def final_metrics(self, mask: Optional[np.ndarray] = None) -> dict:
         acc = self.per_client_acc[-1]
@@ -117,6 +127,8 @@ class Federation:
     targets: Optional[jnp.ndarray] = None          # (N,R,C)
     history: History = dataclasses.field(default_factory=History)
     rng: Any = None
+    uplink: str = "dense32"     # wire codec names; part of the persisted
+    downlink: str = "dense32"   # state so checkpoints restore the format
 
     def client_rows(self, cohort: Cohort) -> np.ndarray:
         return cohort.client_ids
@@ -134,6 +146,8 @@ class FederationConfig:
     delta_graph: bool = False       # incremental O(u·N) server graph
     # updates from the div_cache (policies that support it); off by
     # default — the full rebuild is the bit-exact oracle
+    uplink: str = "dense32"         # messenger wire codec, client->server
+    downlink: str = "dense32"       # K^n target wire codec, server->client
     verbose: bool = False
 
     def __post_init__(self):
@@ -148,6 +162,11 @@ class FederationConfig:
         if self.eval_every < 1:
             raise ValueError(f"eval_every must be >= 1, got "
                              f"{self.eval_every}")
+        for which in ("uplink", "downlink"):
+            try:
+                wire.as_codec(getattr(self, which))
+            except KeyError as e:
+                raise ValueError(f"{which}: {e}") from None
 
 
 RoundCallback = Callable[["FederationEngine", int, Dict[str, Any]], None]
@@ -213,10 +232,13 @@ def _record_metrics(eng, splits: Sequence[ClientSplit], rnd: int, t: float,
     h.server_rounds.append(eng.bus.n_triggers)
     stale = eng.bus.staleness(t)
     h.staleness.append(stale)
+    h.bytes_up.append(float(eng.bus.bytes_up.sum()))
+    h.bytes_down.append(float(eng.bus.bytes_down.sum()))
     metrics: Dict[str, Any] = {
         "round": rnd, "time": float(t), "acc": h.mean_acc[-1],
         "val_acc": h.val_acc[-1], "per_client_acc": acc, "joined": mask,
         "server_rounds": eng.bus.n_triggers, "staleness": stale,
+        "bytes_up": h.bytes_up[-1], "bytes_down": h.bytes_down[-1],
     }
     if eng.last_graph is not None:
         # REAL stats from the policy's last-built graph — no fabricated
@@ -245,6 +267,8 @@ class FederationEngine:
         self.config = config or FederationConfig()
         self.callbacks: List[RoundCallback] = list(callbacks)
         self.clock: Clock = SyncClock()
+        federation.uplink = self.config.uplink
+        federation.downlink = self.config.downlink
         self.clients = ClientRuntime(federation, self.policy, self.config)
         self.bus = ServerBus(federation, self.policy,
                              trigger="every-upload",
@@ -374,6 +398,8 @@ class AsyncFederationEngine:
         self.config = config or FederationConfig()
         self.callbacks: List[RoundCallback] = list(callbacks)
         self.clock = Clock()
+        federation.uplink = self.config.uplink
+        federation.downlink = self.config.downlink
         self.clients = ClientRuntime(federation, self.policy, self.config)
         self.bus = ServerBus(federation, self.policy,
                              trigger=as_trigger(trigger),
@@ -490,40 +516,64 @@ class AsyncFederationEngine:
         return self.history
 
 
+def _pad_cohort_shards(shard_x: List[np.ndarray], shard_y: List[np.ndarray]
+                       ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Stack unequal-length shards: pad to the cohort max with zero rows /
+    -1 labels and return (xs, ys, valid-mask). Truncating to the MIN (the
+    old behaviour) silently dropped every longer client's tail samples."""
+    m = max(len(y) for y in shard_y)
+    lens = np.array([len(y) for y in shard_y])
+    xs = np.stack([np.pad(np.asarray(x), [(0, m - len(x))]
+                          + [(0, 0)] * (np.asarray(x).ndim - 1))
+                   for x in shard_x])
+    ys = np.stack([np.pad(np.asarray(y), (0, m - len(y)),
+                          constant_values=-1) for y in shard_y])
+    mask = np.arange(m)[None, :] < lens[:, None]
+    return xs, ys, mask
+
+
 def evaluate(fed: Federation, splits: Sequence[ClientSplit],
              which: str = "test") -> np.ndarray:
-    """Per-client accuracy (N,) on the requested split."""
+    """Per-client accuracy (N,) on the requested split. Cohorts with
+    unequal shard lengths are padded + masked — no client's test samples
+    are dropped. (Equal lengths keep the original unmasked kernel, which
+    is the bit-exact path the pinned trajectories were captured on.)"""
     accs = np.zeros(fed.n_clients)
     for coh in fed.cohorts:
-        m = min(len(getattr(splits[j], f"{which}_y"))
-                for j in coh.client_ids)
-        xs = np.stack([getattr(splits[i], f"{which}_x")[:m]
-                       for i in coh.client_ids])
-        ys = np.stack([getattr(splits[i], f"{which}_y")[:m]
-                       for i in coh.client_ids])
-        a = cohort_accuracy(coh.apply_fn, coh.params, jnp.asarray(xs),
-                            jnp.asarray(ys))
+        shard_x = [getattr(splits[i], f"{which}_x") for i in coh.client_ids]
+        shard_y = [getattr(splits[i], f"{which}_y") for i in coh.client_ids]
+        lens = {len(y) for y in shard_y}
+        if len(lens) == 1:
+            a = cohort_accuracy(coh.apply_fn, coh.params,
+                                jnp.asarray(np.stack(shard_x)),
+                                jnp.asarray(np.stack(shard_y)))
+        else:
+            xs, ys, mask = _pad_cohort_shards(shard_x, shard_y)
+            a = cohort_accuracy_masked(coh.apply_fn, coh.params,
+                                       jnp.asarray(xs), jnp.asarray(ys),
+                                       jnp.asarray(mask))
         accs[coh.client_ids] = np.asarray(a)
     return accs
 
 
 def precision_recall(fed: Federation, splits: Sequence[ClientSplit],
                      n_classes: int) -> Tuple[float, float]:
-    """Macro precision/recall over all clients' test shards (Table III)."""
+    """Macro precision/recall over all clients' test shards (Table III).
+    Unequal shards are padded + masked, so every test sample counts."""
     from repro.core.client import cohort_pred
     tp = np.zeros(n_classes)
     fp = np.zeros(n_classes)
     fn = np.zeros(n_classes)
     for coh in fed.cohorts:
-        m = min(len(splits[i].test_y) for i in coh.client_ids)
-        xs = np.stack([splits[i].test_x[:m] for i in coh.client_ids])
-        ys = np.stack([splits[i].test_y[:m] for i in coh.client_ids])
+        xs, ys, mask = _pad_cohort_shards(
+            [splits[i].test_x for i in coh.client_ids],
+            [splits[i].test_y for i in coh.client_ids])
         pred = np.asarray(cohort_pred(coh.apply_fn, coh.params,
                                       jnp.asarray(xs)))
         for c in range(n_classes):
-            tp[c] += np.sum((pred == c) & (ys == c))
-            fp[c] += np.sum((pred == c) & (ys != c))
-            fn[c] += np.sum((pred != c) & (ys == c))
+            tp[c] += np.sum((pred == c) & (ys == c) & mask)
+            fp[c] += np.sum((pred == c) & (ys != c) & mask)
+            fn[c] += np.sum((pred != c) & (ys == c) & mask)
     prec = np.mean(tp / np.maximum(tp + fp, 1))
     rec = np.mean(tp / np.maximum(tp + fn, 1))
     return float(prec), float(rec)

@@ -1,16 +1,22 @@
 """Messengers (paper Def. 2): soft decisions on the shared reference set.
 
 A messenger is stored as LOG-probabilities ``(R, C)`` — log-space is safer
-for the downstream KL math and halves the wire cost in bf16 (DESIGN.md §3).
-The repository stacks them into ``S (N, R, C)``.
+for the downstream KL math (DESIGN.md §3). The repository stacks them
+into ``S (N, R, C)``.
+
+On the wire a messenger travels as an encoded ``repro.core.wire.Payload``
+(dense32/dense16/int8/topk); its real uplink cost is
+``wire.payload_bytes(payload)`` — the old ``messenger_bytes`` helper that
+merely *asserted* a bf16 cost is gone.
 """
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import wire
 from repro.models.common import Params
 
 
@@ -22,13 +28,15 @@ def make_messenger(apply_fn: Callable, params: Params,
 
 
 def cohort_messengers(apply_fn: Callable, stacked_params: Params,
-                      ref_x: jnp.ndarray) -> jnp.ndarray:
-    """vmap over a cohort's stacked client params -> (n_cohort, R, C)."""
-    return jax.vmap(lambda p: make_messenger(apply_fn, p, ref_x))(
+                      ref_x: jnp.ndarray,
+                      codec: Union[None, str, wire.Codec] = None
+                      ) -> Union[jnp.ndarray, wire.Payload]:
+    """vmap over a cohort's stacked client params -> (n_cohort, R, C).
+
+    With ``codec``, the stack is wire-encoded before it leaves the
+    function — the device ships a Payload, never raw fp32."""
+    logp = jax.vmap(lambda p: make_messenger(apply_fn, p, ref_x))(
         stacked_params)
-
-
-def messenger_bytes(logp: jnp.ndarray, wire_dtype=jnp.bfloat16) -> int:
-    """Per-round uplink cost of one messenger (the paper's bandwidth claim)."""
-    r, c = logp.shape[-2:]
-    return r * c * jnp.dtype(wire_dtype).itemsize
+    if codec is None:
+        return logp
+    return wire.as_codec(codec).encode(logp, domain="log")

@@ -156,9 +156,21 @@ class ServerPolicy(abc.ABC):
 
     def emit_targets(self, state, graph, *,
                      backend: Optional[str] = None) -> jnp.ndarray:
-        """(N,R,C) fp32 probability targets: the K^n neighbor mean."""
+        """(N,R,C) fp32 probability targets: the K^n neighbor mean.
+
+        The runtime wire-codes this output with the downlink codec
+        before it reaches any client (``ServerBus.fire``) — the rows
+        that actually ship are ``receivers``."""
         probs = jnp.exp(state.repo_logp)
         return ops.neighbor_mean(graph.weights, probs, backend=backend)
+
+    def receivers(self, state, graph) -> jnp.ndarray:
+        """(N,) bool — which clients a K^n downlink payload is sent to
+        (the rows charged wire bytes). Default: every participating
+        client, per the paper ('any client, regardless of its quality,
+        is assigned K neighbors'). Policies that emit nothing (I-SGD)
+        or skip edge-less rows (D-Dist) override."""
+        return state.active
 
     # -- state fold-in -----------------------------------------------------
     def update_state(self, state, quality: jnp.ndarray, graph):

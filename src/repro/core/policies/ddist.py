@@ -39,3 +39,8 @@ class DDistPolicy(ServerPolicy):
         return graph_mod.CollaborationGraph(
             neighbors=jnp.zeros((n, 0), jnp.int32),  # static; not re-derived
             weights=w, similarity=state.sim, candidates=state.active)
+
+    def receivers(self, state, graph) -> jnp.ndarray:
+        """A client whose static edges all point at never-joined peers
+        gets an all-zero row — the server skips its downlink payload."""
+        return state.active & (graph.weights.sum(axis=1) > 0)

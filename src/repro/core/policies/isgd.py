@@ -24,3 +24,7 @@ class ISGDPolicy(ServerPolicy):
             neighbors=jnp.zeros((n, 0), jnp.int32),
             weights=jnp.zeros_like(state.weights),
             similarity=state.sim, candidates=state.active)
+
+    def receivers(self, state, graph) -> jnp.ndarray:
+        """No collaboration, no downlink: zero wire bytes charged."""
+        return jnp.zeros_like(state.active)

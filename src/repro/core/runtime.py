@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import wire
 from repro.core.client import (cohort_messenger_upload, cohort_step)
 from repro.core.server import (policy_round, staleness_summary,
                                upload_messengers)
@@ -243,13 +244,25 @@ class ClientRuntime:
     the mask (clients outside it stay frozen, params and optimizer state).
     RNG consumption order (one split per cohort per step, cohorts in build
     order) is identical to the old round loop, which is what makes the
-    sync engine bit-identical on the same seed."""
+    sync engine bit-identical on the same seed.
+
+    Messengers leave here wire-encoded: each cohort's upload fuses its
+    forward pass with the ``uplink`` codec's encode, and
+    ``collect_messengers`` assembles the per-cohort Payloads into one
+    N-stack Payload (the unit the ServerBus meters and decodes)."""
 
     def __init__(self, federation, policy, config):
         self.fed = federation
         self.policy = policy
         self.config = config
         self.ever_woken = np.zeros(federation.n_clients, bool)
+
+    @property
+    def uplink(self) -> wire.Codec:
+        """Resolved from the Federation state bundle (the engine seeds it
+        from the config; a checkpoint restore may overwrite it), so a
+        resumed run really speaks the restored format."""
+        return wire.as_codec(getattr(self.fed, "uplink", None))
 
     def local_round(self, mask_np: np.ndarray, use_ref: bool) -> None:
         """One local round for the masked clients, in place."""
@@ -271,18 +284,22 @@ class ClientRuntime:
 
     def collect_messengers(self,
                            mask_np: Optional[np.ndarray] = None
-                           ) -> jnp.ndarray:
-        """(N,R,C) messenger log-probs; cohorts with no masked client are
-        skipped (their rows are masked out of the merge anyway)."""
+                           ) -> wire.Payload:
+        """Wire-encoded (N,R,C) messenger batch; cohorts with no masked
+        client are skipped (their rows stay zero in the payload and are
+        masked out of the merge anyway)."""
         fed = self.fed
         n, r, c = fed.server.repo_logp.shape
-        msg = jnp.zeros((n, r, c), jnp.float32)
+        parts, rows = [], []
         for coh in fed.cohorts:
             if mask_np is not None and not mask_np[coh.client_ids].any():
                 continue
-            m = cohort_messenger_upload(coh.apply_fn, coh.params, fed.ref_x)
-            msg = msg.at[jnp.asarray(coh.client_ids)].set(m)
-        return msg
+            parts.append(cohort_messenger_upload(
+                coh.apply_fn, coh.params, fed.ref_x, codec=self.uplink))
+            rows.append(coh.client_ids)
+        if not parts:
+            return self.uplink.encode(jnp.zeros((n, r, c), jnp.float32))
+        return wire.assemble(parts, rows, n)
 
 
 # --------------------------------------------------------------------------
@@ -305,30 +322,62 @@ class ServerBus:
     (``build_graph_delta``) instead of the O(N²) full rebuild —
     ``fresh_since_fire`` is exactly the set of repository rows that
     changed since the cache was last valid. Off by default: the full
-    rebuild stays the bit-exact oracle."""
+    rebuild stays the bit-exact oracle.
+
+    Bandwidth is metered where it is paid: ``deliver`` decodes the
+    uplink Payload on ingest and adds its per-messenger wire bytes to
+    ``bytes_up`` for every transmitting client (superseded out-of-order
+    uploads still burned the link, so they still count); ``fire``
+    wire-codes the policy's K^n targets with the ``downlink`` codec —
+    training consumes the DECODED payload, so a lossy downlink really
+    costs fidelity — and charges ``bytes_down`` to the receiving
+    clients."""
 
     def __init__(self, federation, policy, trigger: Union[None, str,
                                                           Trigger] = None,
-                 backend: Optional[str] = None, delta: bool = False):
+                 backend: Optional[str] = None, delta: bool = False,
+                 uplink: Union[None, str, wire.Codec] = None,
+                 downlink: Union[None, str, wire.Codec] = None):
         self.fed = federation
         self.policy = policy
         self.trigger = as_trigger(trigger)
         self.backend = backend
         self.delta = bool(delta)
+        # None => follow the Federation state bundle (engine-seeded,
+        # checkpoint-restorable); an explicit codec pins this bus
+        self._uplink = uplink
+        self._downlink = downlink
         n = federation.n_clients
         self.last_upload_t = np.full(n, -np.inf)
         self.uploads_since_fire = 0                 # rows merged
         self.fresh_since_fire = np.zeros(n, bool)   # distinct uploaders
         self.n_uploads = 0
         self.n_triggers = 0
+        self.bytes_up = np.zeros(n)    # cumulative uplink wire bytes
+        self.bytes_down = np.zeros(n)  # cumulative downlink wire bytes
         self.last_graph = None
         self.last_staleness: Optional[dict] = None
 
-    def deliver(self, t: float, msg: jnp.ndarray, uploaded: np.ndarray,
+    @property
+    def uplink(self) -> wire.Codec:
+        return wire.as_codec(self._uplink if self._uplink is not None
+                             else getattr(self.fed, "uplink", None))
+
+    @property
+    def downlink(self) -> wire.Codec:
+        return wire.as_codec(self._downlink if self._downlink is not None
+                             else getattr(self.fed, "downlink", None))
+
+    def deliver(self, t: float,
+                msg: Union[jnp.ndarray, wire.Payload],
+                uploaded: np.ndarray,
                 produced_at: Optional[float] = None) -> bool:
         """Merge one upload batch arriving at time ``t``; returns True if
-        the trigger fired a policy round. ``produced_at`` is when the
-        messengers were computed (default ``t``) — a latency-delayed
+        the trigger fired a policy round. ``msg`` is normally the wire
+        Payload the clients encoded; a raw (N,R,C) array is put on the
+        wire here (encoded with the bus's uplink codec) so every ingest
+        pays — and meters — real payload bytes. ``produced_at`` is when
+        the messengers were computed (default ``t``) — a latency-delayed
         upload merges already stale, and staleness tracks the content's
         age, not the arrival instant. Newest content wins per row: an
         out-of-order arrival older than what a row already holds is
@@ -337,8 +386,12 @@ class ServerBus:
         refreshed). The trigger is consulted even for an empty batch, so
         an every-upload (sync) communication round with no available
         client still fires its policy round."""
+        if not isinstance(msg, wire.Payload):
+            msg = self.uplink.encode(jnp.asarray(msg))
+        sent = np.asarray(uploaded, bool)
+        self.bytes_up[sent] += wire.bytes_per_messenger(msg)
         pt = t if produced_at is None else produced_at
-        up = np.asarray(uploaded, bool) & (pt >= self.last_upload_t)
+        up = sent & (pt >= self.last_upload_t)
         fed = self.fed
         fed.server = upload_messengers(fed.server, msg, jnp.asarray(up))
         self.last_upload_t = np.where(up, pt, self.last_upload_t)
@@ -361,12 +414,27 @@ class ServerBus:
         return False
 
     def fire(self, t: float) -> None:
-        """Run policy_round now: grade -> build graph -> emit targets."""
+        """Run policy_round now: grade -> build graph -> emit targets,
+        then put the targets on the downlink wire — clients train on the
+        DECODED payload, and its bytes are charged to the policy's
+        receiver set (K^n payloads per client)."""
         fed = self.fed
         uploaded = self.fresh_since_fire.copy() if self.delta else None
-        fed.server, fed.targets, self.last_graph = policy_round(
+        fed.server, targets, self.last_graph = policy_round(
             fed.server, self.policy, fed.ref_y, backend=self.backend,
             uploaded=uploaded)
+        payload = self.downlink.encode(targets, domain="prob")
+        decoded = wire.decode(payload)
+        recv = np.asarray(self.policy.receivers(fed.server,
+                                                self.last_graph), bool)
+        if not recv.all():
+            # nothing is sent to excluded rows, so nothing must arrive: a
+            # lossy decode would otherwise turn their zero target rows
+            # into spurious near-uniform distributions they train toward
+            decoded = jnp.where(jnp.asarray(recv)[:, None, None],
+                                decoded, 0.0)
+        fed.targets = decoded
+        self.bytes_down[recv] += wire.bytes_per_messenger(payload)
         self.n_triggers += 1
         self.last_staleness = self.staleness(t)
         self.uploads_since_fire = 0

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import quality as quality_mod
+from repro.core import wire
 from repro.core.protocols import Protocol
 
 
@@ -54,12 +55,35 @@ def init_server(n_clients: int, ref_size: int, n_classes: int) -> ServerState:
     )
 
 
-def upload_messengers(state: ServerState, messengers_logp: jnp.ndarray,
+def upload_messengers(state: ServerState,
+                      messengers_logp: Union[jnp.ndarray, wire.Payload],
                       uploaded: jnp.ndarray) -> ServerState:
     """Merge fresh messengers into the repository (rows where uploaded).
 
-    Clients that skipped this round keep their STALE repository row — the
-    paper's asynchronous semantics."""
+    ``messengers_logp`` may be a raw (N,R,C) log-prob stack or an encoded
+    ``wire.Payload`` — the wire form is decoded ON ingest, so the
+    repository always holds what the clients' codec actually delivered
+    (dense32 reproduces the raw array bit-for-bit). Clients that skipped
+    this round keep their STALE repository row — the paper's
+    asynchronous semantics."""
+    if isinstance(messengers_logp, wire.Payload):
+        up_np = np.asarray(uploaded, bool)
+        rows = np.nonzero(up_np)[0]
+        if (len(messengers_logp.shape) == 3
+                and messengers_logp.shape[0] == up_np.size
+                and rows.size < up_np.size):
+            # sparse merge: decode ONLY the uploading rows — codecs are
+            # row-independent, so this is the same reconstruction at
+            # O(u·R·C) instead of O(N·R·C) per delivery
+            if rows.size == 0:
+                return state._replace(active=state.active
+                                      | jnp.asarray(up_np))
+            dec = wire.decode(wire.gather(messengers_logp, rows))
+            repo = state.repo_logp.at[jnp.asarray(rows)].set(
+                dec.astype(jnp.float32))
+            return state._replace(repo_logp=repo,
+                                  active=state.active | jnp.asarray(up_np))
+        messengers_logp = wire.decode(messengers_logp)
     mask = uploaded[:, None, None]
     repo = jnp.where(mask, messengers_logp.astype(jnp.float32),
                      state.repo_logp)

@@ -1,0 +1,136 @@
+"""Pallas TPU kernel: fused dequant -> pairwise messenger KL (Eq. 2) for
+int8-encoded repositories.
+
+The server's graph math wants the (N,N) divergence matrix of whatever the
+repository holds; when messengers arrive int8-quantized (``wire.Int8``)
+the naive route decodes the whole stack to fp32 — an (N,R,C) HBM
+materialization 4x the wire form. This kernel dequantizes per-tile in
+VMEM instead: HBM holds the uint8 codes plus O(N·R) fp32 row statistics,
+and each grid step reconstructs only its (block, BR, C) tiles.
+
+Math: with deq = q·scale + zp, the normalized log-prob is
+logp = deq − logsumexp(deq) = q·scale − lse(q·scale) − the per-row zp is
+an additive shift that cancels in the softmax, so the kernel needs only
+``q``, ``scale``, and the precomputed ``lse`` of the scaled codes. The
+grid is (N/BN, M/BM, R/BR) with the row axis innermost: each (i, j)
+output tile accumulates Σ_r Σ_c p_n (logp_n − logp_m) in fp32 in VMEM,
+row-entropy term fused into the same loop (as in ``pairwise_kl``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.pairwise_kl import default_interpret
+
+DEFAULT_BN = 16
+DEFAULT_BM = 16
+DEFAULT_BR = 128
+
+_LSE_PAD = 1e30     # padded rows: p = exp(deq - LSE_PAD) == 0
+_STATS_CHUNK = 256  # row-stats pass: bounds the fp32 dequant to
+#                     (chunk, R, C) — never the full stack
+
+
+def _kernel(qa_ref, sa_ref, la_ref, qb_ref, sb_ref, lb_ref, out_ref, *,
+            n_r: int, inv_r: float):
+    """qa (BN,BR,C) uint8 codes [i,r]; sa/la (BN,BR) scale/lse [i,r];
+    qb/sb/lb the [j,r] tiles; out (BN,BM) fp32 accumulator."""
+    r = pl.program_id(2)
+
+    @pl.when(r == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    lpa = (qa_ref[...].astype(jnp.float32)
+           * sa_ref[...].astype(jnp.float32)[..., None]
+           - la_ref[...].astype(jnp.float32)[..., None])   # (BN,BR,C)
+    pa = jnp.exp(lpa)
+    lpb = (qb_ref[...].astype(jnp.float32)
+           * sb_ref[...].astype(jnp.float32)[..., None]
+           - lb_ref[...].astype(jnp.float32)[..., None])   # (BM,BR,C)
+    rowterm = jnp.sum(pa * lpa, axis=(1, 2))[:, None]      # (BN,1)
+    cross = jax.lax.dot_general(
+        pa, lpb, (((1, 2), (1, 2)), ((), ())),
+        preferred_element_type=jnp.float32)                # (BN,BM)
+    out_ref[...] += rowterm - cross
+
+    @pl.when(r == n_r - 1)
+    def _scale():
+        out_ref[...] *= inv_r
+
+
+def int8_row_stats(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """lse[n,r] = logsumexp_c(q[n,r,c] * scale[n,r]) in bounded chunks.
+
+    The only fp32 dequant outside the kernel, and it is (chunk, R, C) at
+    a time — O(N·R) output, never an (N,R,C) resident decode."""
+    n = q.shape[0]
+    outs = []
+    for i in range(0, n, _STATS_CHUNK):
+        deq = (q[i:i + _STATS_CHUNK].astype(jnp.float32)
+               * scale[i:i + _STATS_CHUNK].astype(jnp.float32)[..., None])
+        outs.append(jax.nn.logsumexp(deq, axis=-1))
+    return jnp.concatenate(outs, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bm", "br", "interpret"))
+def _call(q, scale, lse, bn, bm, br, interpret):
+    n, r, c = q.shape
+    bn = min(bn, n)
+    bm = min(bm, n)
+    br = min(br, r)
+    n_pad = -n % bn
+    m_pad = -n % bm
+    r_pad = -r % br
+    # padded rows get lse = _LSE_PAD => p = 0 and the (finite) -_LSE_PAD
+    # log-prob is annihilated by it; padded clients are sliced off below
+    q_p = jnp.pad(q, ((0, max(n_pad, m_pad)), (0, r_pad), (0, 0)))
+    s_p = jnp.pad(scale.astype(jnp.float32),
+                  ((0, max(n_pad, m_pad)), (0, r_pad)))
+    l_p = jnp.pad(lse.astype(jnp.float32),
+                  ((0, max(n_pad, m_pad)), (0, r_pad)),
+                  constant_values=_LSE_PAD)
+    gn, gm, gr = (n + n_pad) // bn, (n + m_pad) // bm, (r + r_pad) // br
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_r=gr, inv_r=1.0 / r),
+        grid=(gn, gm, gr),
+        in_specs=[
+            pl.BlockSpec((bn, br, c), lambda i, j, r: (i, r, 0)),  # q  [i]
+            pl.BlockSpec((bn, br), lambda i, j, r: (i, r)),        # s  [i]
+            pl.BlockSpec((bn, br), lambda i, j, r: (i, r)),        # lse[i]
+            pl.BlockSpec((bm, br, c), lambda i, j, r: (j, r, 0)),  # q  [j]
+            pl.BlockSpec((bm, br), lambda i, j, r: (j, r)),        # s  [j]
+            pl.BlockSpec((bm, br), lambda i, j, r: (j, r)),        # lse[j]
+        ],
+        out_specs=pl.BlockSpec((bn, bm), lambda i, j, r: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n + n_pad, n + m_pad), jnp.float32),
+        interpret=interpret,
+    )(q_p[:n + n_pad], s_p[:n + n_pad], l_p[:n + n_pad],
+      q_p[:n + m_pad], s_p[:n + m_pad], l_p[:n + m_pad])
+    return out[:n, :n]
+
+
+def int8_pairwise_kl(q: jnp.ndarray, scale: jnp.ndarray, zp: jnp.ndarray,
+                     bn: int = DEFAULT_BN, bm: int = DEFAULT_BM,
+                     br: int = DEFAULT_BR,
+                     interpret: Optional[bool] = None) -> jnp.ndarray:
+    """q (N,R,C) uint8, scale/zp (N,R) -> (N,N) fp32 divergence matrix.
+
+    ``zp`` is accepted for API symmetry with the wire form but never read:
+    a per-row additive shift cancels in the softmax normalization.
+    ``interpret`` defaults from the platform (compiled on TPU,
+    interpreter elsewhere)."""
+    del zp
+    if interpret is None:
+        interpret = default_interpret()
+    if q.ndim != 3 or scale.shape != q.shape[:2]:
+        raise ValueError(f"shapes disagree: q {q.shape}, scale "
+                         f"{scale.shape}")
+    lse = int8_row_stats(q, scale)
+    return _call(q, scale, lse, bn, bm, br, interpret)

@@ -16,6 +16,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dequant_kl as _dk
 from repro.kernels import neighbor_mean as _nm
 from repro.kernels import pairwise_kl as _pk
 from repro.kernels import ref as _ref
@@ -83,6 +84,26 @@ def pairwise_kl_pair(logp_a: jnp.ndarray, logp_b: jnp.ndarray,
     if backend == "jnp":
         return _pair_ref_jit(logp_a, logp_b)
     return _pk.pairwise_kl_pair(logp_a, logp_b,
+                                interpret=(backend == "interpret"), **blocks)
+
+
+# the oracle materializes the dense fp32 decode; jit so the dequant and
+# the KL matmul still fuse into one compiled call on the jnp path
+_int8_ref_jit = jax.jit(_ref.int8_pairwise_kl_ref)
+
+
+def int8_pairwise_kl(q: jnp.ndarray, scale: jnp.ndarray, zp: jnp.ndarray,
+                     backend: Optional[str] = None, **blocks) -> jnp.ndarray:
+    """Eq.2 divergence matrix straight from the int8 wire form.
+
+    q (N,R,C) uint8 codes, scale/zp (N,R) per-row affine params
+    (``wire.Int8`` payload fields) -> (N,N) fp32. The Pallas path
+    dequantizes per-tile in VMEM and never materializes the fp32
+    (N,R,C) decode in HBM; the jnp path is the dense oracle."""
+    backend = backend or default_backend()
+    if backend == "jnp":
+        return _int8_ref_jit(q, scale, zp)
+    return _dk.int8_pairwise_kl(q, scale, zp,
                                 interpret=(backend == "interpret"), **blocks)
 
 

@@ -43,6 +43,32 @@ def pairwise_kl_pair_ref(logp_a: jnp.ndarray,
     return (rowterm[:, None] - cross) / r
 
 
+def int8_dequant_ref(q: jnp.ndarray, scale: jnp.ndarray,
+                     zp: jnp.ndarray) -> jnp.ndarray:
+    """Int8 wire form -> normalized log-probs, fully materialized.
+
+    q (..., R, C) uint8 codes, scale/zp (..., R) per-row affine params
+    (``repro.core.wire.Int8``). The per-row additive ``zp`` cancels in
+    the softmax normalization but is applied anyway so the oracle mirrors
+    the codec's decode exactly.
+    """
+    deq = (q.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]
+           + zp.astype(jnp.float32)[..., None])
+    return jax.nn.log_softmax(deq, axis=-1)
+
+
+def int8_pairwise_kl_ref(q: jnp.ndarray, scale: jnp.ndarray,
+                         zp: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 2 divergence matrix of an int8-encoded repository.
+
+    The oracle for the fused dequant->KL kernel: dequantize the whole
+    (N,R,C) stack to fp32 log-probs, then the dense pairwise KL. The
+    Pallas kernel computes the same matrix without ever materializing
+    the fp32 decode in HBM.
+    """
+    return pairwise_kl_ref(int8_dequant_ref(q, scale, zp))
+
+
 def soft_ce_ref(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
     """Eq. 1 quality: g[n] = sum_i H(softmax(logits[n,i]), y_i).
 

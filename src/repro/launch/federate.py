@@ -14,6 +14,11 @@ Event clock (virtual-time async runtime):
       --arrivals straggler-latency --latency 2.5 --trigger quorum
   PYTHONPATH=src python -m repro.launch.federate --clock event \
       --arrivals bursty --trigger every-k --trigger-k 10 --until 60
+
+Messenger wire formats (bandwidth accounting lands in the summary):
+
+  PYTHONPATH=src python -m repro.launch.federate --uplink int8 \
+      --downlink topk:4 --rounds 40
 """
 from __future__ import annotations
 
@@ -27,7 +32,8 @@ from repro.core import (ArrivalProcess, AsyncFederationEngine,
                         FederationEngine, HeterogeneousCadence, Protocol,
                         Quorum, RandomDropout, Schedule, ScheduleArrivals,
                         StagedJoin, Straggler, StragglerLatency, Trigger,
-                        WallInterval, precision_recall, registered_arrivals,
+                        WallInterval, as_codec, precision_recall,
+                        registered_arrivals, registered_codecs,
                         registered_policies, registered_triggers)
 from repro.data import fmnist_like, make_splits, pad_like, sc_like
 from repro.models.mlp import hetero_mlp_zoo
@@ -90,6 +96,13 @@ def main() -> None:
     ap.add_argument("--delta", action="store_true",
                     help="incremental O(u·N) server graph updates from the "
                          "divergence cache (vs full O(N^2) rebuild)")
+    ap.add_argument("--uplink", default="dense32",
+                    help="messenger wire codec, client->server "
+                         f"({', '.join(registered_codecs())}; "
+                         f"'topk:K' parameterizes)")
+    ap.add_argument("--downlink", default="dense32",
+                    help="K^n target wire codec, server->client "
+                         "(same names as --uplink)")
     ap.add_argument("--rho", type=float, default=0.8)
     ap.add_argument("--q", type=int, default=16)
     ap.add_argument("--k", type=int, default=8)
@@ -129,6 +142,11 @@ def main() -> None:
     args = ap.parse_args()
     if args.rounds < 1:
         ap.error("--rounds must be >= 1")
+    for which in ("uplink", "downlink"):
+        try:
+            as_codec(getattr(args, which))
+        except (KeyError, ValueError) as e:
+            ap.error(f"--{which}: {e}")
 
     ds = DATASETS[args.dataset](samples_per_client=args.samples_per_client,
                                 ref_size=args.ref_size)
@@ -142,7 +160,9 @@ def main() -> None:
                               local_steps=args.local_steps,
                               eval_every=args.eval_every,
                               backend=args.backend,
-                              delta_graph=args.delta, verbose=True)
+                              delta_graph=args.delta,
+                              uplink=args.uplink, downlink=args.downlink,
+                              verbose=True)
     t0 = time.time()
     if args.clock == "event":
         arrivals = make_arrivals(args, ds.n_clients, args.rounds)
@@ -173,6 +193,8 @@ def main() -> None:
         "virtual_time": hist.times[-1],
         "server_rounds": hist.server_rounds[-1],
         "staleness": hist.staleness[-1],
+        "uplink": args.uplink, "downlink": args.downlink,
+        "bytes_up": hist.bytes_up[-1], "bytes_down": hist.bytes_down[-1],
         "wall_s": round(time.time() - t0, 1),
     }
     if args.clock == "event":

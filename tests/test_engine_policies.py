@@ -1,19 +1,20 @@
 """Tests for the pluggable-policy API, availability schedules, and the
-FederationEngine (registry round-trips, engine-vs-legacy parity, and a toy
-policy running end-to-end with zero core changes)."""
-import warnings
+FederationEngine (registry round-trips, schedule parity, and a toy policy
+running end-to-end with zero core changes)."""
+import types
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (AlwaysOn, FederationConfig, FederationEngine,
-                        Protocol, RandomDropout, ServerPolicy, StagedJoin,
-                        Straggler, build_federation, fedmd, get_policy,
-                        get_schedule, graph_stats, init_server, isgd,
+from repro.core import (AlwaysOn, Federation, FederationConfig,
+                        FederationEngine, Protocol, RandomDropout,
+                        ServerPolicy, StagedJoin, Straggler, evaluate,
+                        fedmd, get_policy, get_schedule, graph_stats,
+                        init_server, isgd, precision_recall,
                         register_policy, registered_policies, server_round,
-                        sqmd, train_federation, upload_messengers)
+                        sqmd, upload_messengers)
 from repro.core.graph import CollaborationGraph
 from repro.core.policies import SQMDPolicy, as_policy, unregister_policy
 from repro.data import make_splits, pad_like
@@ -203,31 +204,13 @@ def test_config_validation():
         FederationConfig(eval_every=0)
 
 
-def test_engine_matches_legacy_shims(setup):
-    """The deprecation shims and the engine must produce bit-identical
-    trajectories for the same seed."""
-    ds, splits, zoo, assignment = setup
-    engine = FederationEngine.build(
-        ds, splits, zoo, assignment, sqmd(q=8, k=4),
-        config=FederationConfig(rounds=4, batch_size=8, eval_every=2),
-        seed=7)
-    h_new = engine.fit(splits)
-
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        fed = build_federation(ds, splits, zoo, assignment, sqmd(q=8, k=4),
-                               seed=7)
-        h_old = train_federation(fed, splits, n_rounds=4, batch_size=8,
-                                 eval_every=2)
-    np.testing.assert_allclose(h_new.mean_acc, h_old.mean_acc, atol=1e-7)
-    np.testing.assert_allclose(np.asarray(engine.server.weights),
-                               np.asarray(fed.server.weights), atol=1e-7)
-
-
-def test_legacy_shims_warn(setup):
-    ds, splits, zoo, assignment = setup
-    with pytest.warns(DeprecationWarning, match="FederationEngine.build"):
-        build_federation(ds, splits, zoo, assignment, isgd(), seed=0)
+def test_legacy_federation_module_is_gone():
+    """The deprecation shims were deleted: the engine is the only API."""
+    import repro.core
+    assert not hasattr(repro.core, "build_federation")
+    assert not hasattr(repro.core, "train_federation")
+    with pytest.raises(ImportError):
+        import repro.core.federation  # noqa: F401
 
 
 def test_engine_backend_threading(setup):
@@ -301,20 +284,71 @@ def test_engine_runs_under_flaky_schedules(setup, schedule):
     assert np.isfinite(hist.mean_acc).all()
 
 
-def test_engine_staged_join_matches_legacy_join_round(setup):
-    """StagedJoin schedule reproduces the legacy join_round argument."""
+def test_engine_staged_join_matches_join_round_arg(setup):
+    """A StagedJoin schedule and the ``join_round=`` build argument are
+    the same thing: identical same-seed trajectories."""
     ds, splits, zoo, assignment = setup
     n = ds.n_clients
     join = [0] * (n - 6) + [2] * 6
+    cfg = dict(rounds=3, batch_size=8, eval_every=2)
     engine = FederationEngine.build(
         ds, splits, zoo, assignment, sqmd(q=8, k=4),
-        config=FederationConfig(rounds=3, batch_size=8, eval_every=2),
-        schedule=StagedJoin(join), seed=5)
+        config=FederationConfig(**cfg), schedule=StagedJoin(join), seed=5)
     h_new = engine.fit(splits)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        fed = build_federation(ds, splits, zoo, assignment, sqmd(q=8, k=4),
-                               seed=5, join_round=join)
-        h_old = train_federation(fed, splits, n_rounds=3, batch_size=8,
-                                 eval_every=2)
+    other = FederationEngine.build(
+        ds, splits, zoo, assignment, sqmd(q=8, k=4),
+        config=FederationConfig(**cfg), join_round=join, seed=5)
+    h_old = other.fit(splits)
     np.testing.assert_allclose(h_new.mean_acc, h_old.mean_acc, atol=1e-7)
+
+
+# --- evaluate / precision_recall with unequal shards (regression) ---------
+
+def _const_predictor_fed(test_lens, n_classes=3):
+    """One cohort of constant class-0 predictors with UNEQUAL test shards:
+    exact accuracy/precision arithmetic by hand."""
+    apply_fn = lambda p, x: jnp.tile(  # noqa: E731
+        jnp.array([5.0] + [0.0] * (n_classes - 1)), (x.shape[0], 1))
+    n = len(test_lens)
+    coh = types.SimpleNamespace(
+        family_name="const", apply_fn=apply_fn,
+        params=jnp.zeros((n, 1)), opt_state=None,
+        client_ids=np.arange(n), n_clients=n, data={})
+    rng = np.random.default_rng(0)
+    splits = []
+    for m in test_lens:
+        ys = np.arange(m) % n_classes          # class 0 hit every n_classes
+        splits.append(types.SimpleNamespace(
+            test_x=rng.normal(size=(m, 4)).astype(np.float32),
+            test_y=ys))
+    from repro.optim import sgd
+    fed = Federation(cohorts=[coh], server=init_server(n, 4, n_classes),
+                     protocol=isgd(), ref_x=jnp.zeros((4, 4)),
+                     ref_y=jnp.zeros(4), optimizer=sgd(0.1), n_clients=n)
+    return fed, splits
+
+
+def test_evaluate_unequal_shards_drops_no_samples():
+    """Regression: evaluate() used to truncate every cohort shard to the
+    SHORTEST client's length — a client with 9 samples (3 of class 0) was
+    scored on its first 4 only."""
+    fed, splits = _const_predictor_fed([4, 9])
+    acc = evaluate(fed, splits)
+    # exact per-client means over the FULL shards: ceil(m/3)/m class-0 hits
+    np.testing.assert_allclose(acc, [2 / 4, 3 / 9], atol=1e-6)
+
+
+def test_precision_recall_unequal_shards_counts_everything():
+    fed, splits = _const_predictor_fed([4, 9], n_classes=3)
+    prec, rec = precision_recall(fed, splits, 3)
+    # 13 predictions of class 0; true class-0 count = 2 + 3 = 5
+    assert prec == pytest.approx((5 / 13) / 3)
+    assert rec == pytest.approx(1 / 3)
+
+
+def test_evaluate_equal_shards_unchanged():
+    """Equal lengths keep the original unmasked path (bit-exact with the
+    pinned trajectories) and agree with the masked arithmetic."""
+    fed, splits = _const_predictor_fed([6, 6])
+    np.testing.assert_allclose(evaluate(fed, splits), [2 / 6, 2 / 6],
+                               atol=1e-6)

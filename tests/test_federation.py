@@ -5,8 +5,8 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.core import (build_federation, evaluate, run_round, sqmd, isgd,
-                        fedmd, ddist, train_federation)
+from repro.core import (FederationConfig, FederationEngine, evaluate, sqmd,
+                        isgd, fedmd, ddist)
 from repro.data import make_splits, pad_like, sc_like
 from repro.models.mlp import hetero_mlp_zoo
 
@@ -20,19 +20,28 @@ def setup():
     return ds, splits, zoo, assignment
 
 
+def _build(setup, proto, seed, rounds=3, batch_size=8, eval_every=10,
+           join_round=None):
+    ds, splits, zoo, assignment = setup
+    return FederationEngine.build(
+        ds, splits, zoo, assignment, proto,
+        config=FederationConfig(rounds=rounds, batch_size=batch_size,
+                                eval_every=eval_every),
+        seed=seed, join_round=join_round)
+
+
 def test_federation_improves_over_init(setup):
     ds, splits, zoo, assignment = setup
-    fed = build_federation(ds, splits, zoo, assignment,
-                           sqmd(q=12, k=4, rho=0.5), seed=1)
-    acc0 = evaluate(fed, splits).mean()
-    hist = train_federation(fed, splits, n_rounds=15, batch_size=16,
-                            eval_every=14)
+    engine = _build(setup, sqmd(q=12, k=4, rho=0.5), seed=1, rounds=15,
+                    batch_size=16, eval_every=14)
+    acc0 = evaluate(engine.fed, splits).mean()
+    hist = engine.fit(splits)
     assert hist.mean_acc[-1] > acc0 + 0.05
 
 
 def test_heterogeneous_cohorts_exist(setup):
     ds, splits, zoo, assignment = setup
-    fed = build_federation(ds, splits, zoo, assignment, sqmd(), seed=1)
+    fed = _build(setup, sqmd(), seed=1).fed
     assert len(fed.cohorts) == 3
     sizes = {c.family_name: c.n_clients for c in fed.cohorts}
     assert sum(sizes.values()) == ds.n_clients
@@ -46,10 +55,10 @@ def test_heterogeneous_cohorts_exist(setup):
                                         lambda: ddist(k=4), isgd])
 def test_all_protocols_run(setup, make_proto):
     ds, splits, zoo, assignment = setup
-    fed = build_federation(ds, splits, zoo, assignment, make_proto(), seed=2)
+    engine = _build(setup, make_proto(), seed=2)
     for rnd in range(3):
-        run_round(fed, rnd, batch_size=8)
-    acc = evaluate(fed, splits)
+        engine.run_round(rnd)
+    acc = evaluate(engine.fed, splits)
     assert acc.shape == (ds.n_clients,)
     assert np.isfinite(acc).all()
 
@@ -60,15 +69,14 @@ def test_async_join_schedule(setup):
     ds, splits, zoo, assignment = setup
     n = ds.n_clients
     join = [0] * (n - 6) + [5] * 6          # last 6 clients join at round 5
-    fed = build_federation(ds, splits, zoo, assignment,
-                           sqmd(q=10, k=4, rho=0.5), seed=3,
-                           join_round=join)
-    late = np.array(fed.cohorts[0].client_ids)  # snapshot params of a late client
+    engine = _build(setup, sqmd(q=10, k=4, rho=0.5), seed=3, rounds=8,
+                    join_round=join)
+    fed = engine.fed
     late_ids = [i for i in range(n) if join[i] == 5]
     before = {c.family_name: jax.tree.map(lambda x: np.asarray(x).copy(),
                                           c.params) for c in fed.cohorts}
     for rnd in range(3):
-        run_round(fed, rnd, batch_size=8)
+        engine.run_round(rnd)
     # late clients' params untouched during rounds 0-2
     for c in fed.cohorts:
         rows = [i for i, cid in enumerate(c.client_ids) if cid in late_ids]
@@ -82,7 +90,7 @@ def test_async_join_schedule(setup):
     assert np.allclose(w[:, late_ids], 0.0)
     # after joining they start moving
     for rnd in range(5, 8):
-        run_round(fed, rnd, batch_size=8)
+        engine.run_round(rnd)
     moved = False
     for c in fed.cohorts:
         rows = [i for i, cid in enumerate(c.client_ids) if cid in late_ids]
@@ -98,8 +106,9 @@ def test_messengers_only_cross_cohorts(setup):
     """Privacy contract: the server state contains no model parameters and
     no raw training samples — only (N,R,C) soft decisions + scalars."""
     ds, splits, zoo, assignment = setup
-    fed = build_federation(ds, splits, zoo, assignment, sqmd(), seed=4)
-    run_round(fed, 0, batch_size=8)
+    engine = _build(setup, sqmd(), seed=4)
+    engine.run_round(0)
+    fed = engine.fed
     n, r, c = fed.server.repo_logp.shape
     assert (n, r, c) == (ds.n_clients, len(ds.ref_y), ds.n_classes)
     leaves = jax.tree.leaves(fed.server._asdict())
@@ -114,14 +123,16 @@ def test_messengers_only_cross_cohorts(setup):
 def test_checkpoint_roundtrip(tmp_path, setup):
     from repro.checkpoint import restore_federation, save_federation
     ds, splits, zoo, assignment = setup
-    fed = build_federation(ds, splits, zoo, assignment, sqmd(), seed=5)
+    engine = _build(setup, sqmd(), seed=5)
     for rnd in range(2):
-        run_round(fed, rnd, batch_size=8)
-    acc_before = evaluate(fed, splits)
-    save_federation(str(tmp_path), fed, step=2)
+        engine.run_round(rnd)
+    acc_before = evaluate(engine.fed, splits)
+    save_federation(str(tmp_path), engine.fed, step=2)
 
-    fed2 = build_federation(ds, splits, zoo, assignment, sqmd(), seed=99)
+    fed2 = _build(setup, sqmd(), seed=99).fed
     step = restore_federation(str(tmp_path), fed2)
     assert step == 2
     acc_after = evaluate(fed2, splits)
     np.testing.assert_allclose(acc_before, acc_after, atol=1e-6)
+    # the wire codec names round-trip with the state
+    assert fed2.uplink == "dense32" and fed2.downlink == "dense32"

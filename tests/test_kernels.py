@@ -98,9 +98,13 @@ def test_ops_dispatch_backends_agree():
     logp = _messengers(8, 16, 4, jnp.float32)
     labels = jax.random.randint(jax.random.key(5), (16,), 0, 4)
     w = jnp.full((8, 8), 1.0 / 8)
+    from repro.core.wire import Int8
+    wire8 = Int8().encode(logp).arrays
     for fn, args in [(ops.pairwise_kl, (logp,)),
                      (ops.soft_ce, (logp, labels)),
-                     (ops.neighbor_mean, (w, jnp.exp(logp)))]:
+                     (ops.neighbor_mean, (w, jnp.exp(logp))),
+                     (ops.int8_pairwise_kl,
+                      (wire8["q"], wire8["scale"], wire8["zp"]))]:
         a = fn(*args, backend="jnp")
         b = fn(*args, backend="interpret")
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),

@@ -7,8 +7,8 @@ import pytest
 pytest.importorskip("hypothesis")  # optional dep: skip cleanly if absent
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import (candidate_mask, divergence_matrix, init_server,
-                        select_neighbors, similarity_matrix,
+from repro.core import (candidate_mask, decode, divergence_matrix, encode,
+                        init_server, select_neighbors, similarity_matrix,
                         update_divergence_cache, upload_messengers)
 from repro.core.distill import ref_loss
 from repro.kernels import ref
@@ -53,6 +53,57 @@ def test_div_cache_scatter_matches_full_rebuild(dims, seed, steps):
     if never.any():
         assert np.allclose(np.asarray(cache)[np.ix_(never, never)], 0.0,
                            atol=1e-6)
+
+
+# per-codec decode∘encode error budget: max mean round-trip KL
+# (nats/ref-sample). dense32 is asserted bitwise below, not via KL.
+_CODEC_KL_BOUND = {"dense16": 2e-2, "int8": 5e-2, "topk": 1.5,
+                   "topk:2": 2.5}
+
+
+@settings(max_examples=20, deadline=None)
+@given(_dims, st.integers(0, 2**31 - 1))
+def test_wire_dense32_roundtrip_is_bitwise_identity(dims, seed):
+    n, r, c = dims
+    z = jax.random.normal(jax.random.key(seed), (n, r, c)) * 4
+    logp = jax.nn.log_softmax(z, -1)
+    out = decode(encode("dense32", logp))
+    assert out.dtype == logp.dtype
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(logp))
+
+
+@settings(max_examples=15, deadline=None)
+@given(_dims, st.integers(0, 2**31 - 1),
+       st.sampled_from(sorted(_CODEC_KL_BOUND)))
+def test_wire_lossy_roundtrip_kl_bounded(dims, seed, codec):
+    """decode∘encode stays within each codec's KL budget and always
+    returns a normalized distribution — over arbitrary shapes, including
+    near-one-hot rows (logits scaled x4)."""
+    n, r, c = dims
+    z = jax.random.normal(jax.random.key(seed), (n, r, c)) * 4
+    logp = jax.nn.log_softmax(z, -1)
+    dec = decode(encode(codec, logp))
+    np.testing.assert_allclose(np.asarray(jax.nn.logsumexp(dec, -1)), 0.0,
+                               atol=1e-4)
+    # mean KL(orig || decoded) per reference sample, via the Eq.2 strip
+    kl = np.diag(np.asarray(ref.pairwise_kl_pair_ref(logp, dec)))
+    assert (kl > -1e-5).all()
+    assert kl.mean() <= _CODEC_KL_BOUND[codec]
+
+
+@settings(max_examples=15, deadline=None)
+@given(_dims, st.integers(0, 2**31 - 1),
+       st.sampled_from(["dense16", "int8", "topk"]))
+def test_wire_prob_domain_roundtrip_stays_on_simplex(dims, seed, codec):
+    n, r, c = dims
+    probs = jax.nn.softmax(
+        jax.random.normal(jax.random.key(seed), (n, r, c)) * 3, -1)
+    dec = np.asarray(decode(encode(codec, probs, domain="prob")))
+    np.testing.assert_allclose(dec.sum(-1), 1.0, atol=1e-4)
+    assert (dec >= 0).all()
+    # L1 error bounded (worst over rows); topk's tail respread dominates
+    l1 = np.abs(dec - np.asarray(probs)).sum(-1).max()
+    assert l1 <= (0.05 if codec == "dense16" else 1.0)
 
 
 @settings(max_examples=25, deadline=None)
