@@ -72,30 +72,48 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
-def save_federation(ckpt_dir: str, fed, step: int) -> None:
+def save_federation(ckpt_dir: str, fed, step: int, bus=None) -> None:
     """Persist the full federation: every cohort's stacked params/opt state
     + the server state (repository, graph, quality) + the messenger wire
     codec names the run was using (so a resumed run speaks the same
-    format)."""
+    format) + the RNG key and current distill targets. Device-sharded
+    cohorts persist their REAL rows only — checkpoint files are
+    device-layout-agnostic and restore onto any mesh (or none).
+
+    ``bus`` (a ``ServerBus``) additionally persists the runtime's trigger
+    and staleness bookkeeping (uploads-since-fire counters, per-client
+    last-upload times, wire-byte meters): without it a restored every-k or
+    quorum engine double-fires or skips its first server round."""
     tree = {
         "server": fed.server._asdict(),
         "cohorts": [{
             "family": c.family_name,
             "client_ids": np.asarray(c.client_ids),
-            "params": c.params,
-            "opt_state": _optstate_to_tree(c.opt_state),
+            "params": c.real_params,
+            "opt_state": _optstate_to_tree(c.real_opt_state),
         } for c in fed.cohorts],
         "wire": {"uplink": getattr(fed, "uplink", "dense32"),
                  "downlink": getattr(fed, "downlink", "dense32")},
         "round": step,
     }
+    if fed.rng is not None:
+        tree["rng"] = np.asarray(jax.random.key_data(fed.rng))
+    if fed.targets is not None:
+        tree["targets"] = fed.targets
+    if bus is not None:
+        tree["bus"] = bus.state_dict()
     save_pytree(os.path.join(ckpt_dir, f"step_{step}.msgpack"), tree)
 
 
-def restore_federation(ckpt_dir: str, fed, step: Optional[int] = None):
+def restore_federation(ckpt_dir: str, fed, step: Optional[int] = None,
+                       bus=None):
     """Restore in place; cohort order/families must match. Legacy files
     (written before the wire subsystem) restore as ``dense32`` — the
-    bit-identical pass-through codec they implicitly used."""
+    bit-identical pass-through codec they implicitly used. Files without a
+    ``bus`` section restore the given bus with ZEROED counters (the legacy
+    contract); files without rng/targets leave those untouched. Cohorts
+    that run device-sharded re-apply their ghost padding + placement after
+    the real rows load."""
     from repro.core.server import ServerState
     from repro.core.wire import as_codec
     step = step if step is not None else latest_step(ckpt_dir)
@@ -112,10 +130,20 @@ def restore_federation(ckpt_dir: str, fed, step: Optional[int] = None):
     fed.uplink = codecs.get("uplink", "dense32")
     fed.downlink = codecs.get("downlink", "dense32")
     as_codec(fed.uplink), as_codec(fed.downlink)   # names must resolve
+    if "rng" in tree:
+        fed.rng = jax.random.wrap_key_data(jnp.asarray(tree["rng"]))
+    if "targets" in tree:
+        fed.targets = tree["targets"]
     for c, saved in zip(fed.cohorts, tree["cohorts"]):
         assert c.family_name == saved["family"], "cohort layout changed"
         c.params = saved["params"]
-        c.opt_state = _optstate_from_tree(saved["opt_state"], c.opt_state)
+        c.opt_state = _optstate_from_tree(saved["opt_state"],
+                                          c.real_opt_state)
+        if c.sharding is not None:
+            from repro.sharding import repad_cohort_arrays
+            repad_cohort_arrays(c)
+    if bus is not None:
+        bus.load_state_dict(tree.get("bus"))
     return step
 
 

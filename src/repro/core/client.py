@@ -24,17 +24,55 @@ Params = Any
 
 @dataclasses.dataclass
 class Cohort:
-    """All clients sharing one model family."""
+    """All clients sharing one model family.
+
+    Under device sharding (``repro.sharding.place_cohort_stacks``) the
+    stacked arrays carry ``n_pad`` extra GHOST rows so the client axis
+    divides the mesh — ghosts replicate the last real client and are
+    permanently frozen by the step's trainable mask. ``client_ids`` always
+    lists REAL clients only."""
     family_name: str
     apply_fn: Callable[[Params, jnp.ndarray], jnp.ndarray]
-    params: Params                       # stacked (n_c, ...)
+    params: Params                       # stacked (n_c + n_pad, ...)
     opt_state: Any                       # stacked
     client_ids: np.ndarray               # (n_c,) global client indices
-    data: Dict[str, jnp.ndarray]         # {x (n_c,M,L), y (n_c,M)}
+    data: Dict[str, jnp.ndarray]         # {x (n_c+n_pad,M,L), y (..,M)}
+    n_pad: int = 0                       # ghost rows (device-multiple pad)
+    sharding: Any = None                 # NamedSharding of the stacks
 
     @property
     def n_clients(self) -> int:
         return len(self.client_ids)
+
+    @property
+    def n_rows(self) -> int:
+        """Stacked rows including ghost padding."""
+        return self.n_clients + self.n_pad
+
+    @property
+    def padded_ids(self) -> np.ndarray:
+        """Global client index per stacked row; ghost rows alias the last
+        real client (their targets/availability gather somewhere valid —
+        the trainable mask is what actually silences them)."""
+        if self.n_pad == 0:
+            return self.client_ids
+        return np.concatenate(
+            [self.client_ids,
+             np.full(self.n_pad, self.client_ids[-1],
+                     self.client_ids.dtype)])
+
+    @property
+    def real_params(self) -> Params:
+        """Params of the real clients only (ghost rows sliced off)."""
+        if self.n_pad == 0:
+            return self.params
+        return jax.tree.map(lambda a: a[: self.n_clients], self.params)
+
+    @property
+    def real_opt_state(self) -> Any:
+        if self.n_pad == 0:
+            return self.opt_state
+        return jax.tree.map(lambda a: a[: self.n_clients], self.opt_state)
 
 
 def make_cohort(family_name: str, init_fn, apply_fn, optimizer: Optimizer,
@@ -55,12 +93,11 @@ def _client_loss(apply_fn, params, x, y, ref_x, targets, rho: float,
     return (1.0 - rho) * loc + rho * ref
 
 
-@functools.partial(jax.jit, static_argnames=("apply_fn", "optimizer", "rho",
-                                             "use_ref"))
-def cohort_step(apply_fn, optimizer: Optimizer, params, opt_state,
-                batch_x, batch_y, ref_x, targets, trainable,
-                rho: float, use_ref: bool):
-    """One vmapped SGD step for a whole cohort.
+def _cohort_step(apply_fn, optimizer: Optimizer, params, opt_state,
+                 batch_x, batch_y, ref_x, targets, trainable,
+                 rho: float, use_ref: bool):
+    """One vmapped SGD step for a whole cohort (jit'd as ``cohort_step``;
+    ``sharded_cohort_step`` jits the same body pinned to a client mesh).
 
     batch_x (n_c,B,L), batch_y (n_c,B), targets (n_c,R,C) per-client
     distill targets, trainable (n_c,) bool (inactive clients frozen).
@@ -86,8 +123,11 @@ def cohort_step(apply_fn, optimizer: Optimizer, params, opt_state,
                          trainable)
 
 
-@functools.partial(jax.jit, static_argnames=("apply_fn", "codec"))
-def cohort_messenger_upload(apply_fn, params, ref_x, codec=None):
+_STEP_STATICS = ("apply_fn", "optimizer", "rho", "use_ref")
+cohort_step = jax.jit(_cohort_step, static_argnames=_STEP_STATICS)
+
+
+def _cohort_messenger_upload(apply_fn, params, ref_x, codec=None):
     """(n_c, R, C) log-prob messengers for the cohort.
 
     ``codec`` (a hashable ``wire.Codec``, static under jit) encodes the
@@ -95,6 +135,35 @@ def cohort_messenger_upload(apply_fn, params, ref_x, codec=None):
     one compiled call and the return value is the Payload that actually
     crosses the device boundary. ``None`` keeps the raw-array form."""
     return cohort_messengers(apply_fn, params, ref_x, codec=codec)
+
+
+cohort_messenger_upload = jax.jit(_cohort_messenger_upload,
+                                  static_argnames=("apply_fn", "codec"))
+
+
+@functools.lru_cache(maxsize=None)
+def sharded_cohort_step(mesh):
+    """``cohort_step`` pinned to a client mesh: the vmapped rows never
+    interact, so pinning every output to the mesh's client axis
+    (out_shardings broadcast over the pytree) partitions the whole step
+    with zero collectives — params/opt state stay resident on their
+    shard across steps. Cached per mesh so each cohort shape compiles
+    once. Inputs must be padded to a device multiple
+    (``repro.sharding.place_cohort_stacks``)."""
+    from repro.sharding import client_sharding
+    return jax.jit(_cohort_step, static_argnames=_STEP_STATICS,
+                   out_shardings=client_sharding(mesh))
+
+
+@functools.lru_cache(maxsize=None)
+def sharded_messenger_upload(mesh):
+    """``cohort_messenger_upload`` pinned to a client mesh: every Payload
+    field has a leading client axis, so one row sharding broadcasts over
+    the whole encoded pytree."""
+    from repro.sharding import client_sharding
+    return jax.jit(_cohort_messenger_upload,
+                   static_argnames=("apply_fn", "codec"),
+                   out_shardings=client_sharding(mesh))
 
 
 @functools.partial(jax.jit, static_argnames=("apply_fn",))

@@ -148,11 +148,16 @@ class FederationConfig:
     # default — the full rebuild is the bit-exact oracle
     uplink: str = "dense32"         # messenger wire codec, client->server
     downlink: str = "dense32"       # K^n target wire codec, server->client
+    devices: Optional[int] = None   # shard the client axis over this many
+    # devices (cohort steps + server divergence rows); None = the
+    # single-device legacy path, bit-identical to every pinned trajectory
     verbose: bool = False
 
     def __post_init__(self):
         if self.rounds < 0:
             raise ValueError(f"rounds must be >= 0, got {self.rounds}")
+        if self.devices is not None and self.devices < 1:
+            raise ValueError(f"devices must be >= 1, got {self.devices}")
         if self.batch_size < 1:
             raise ValueError(f"batch_size must be >= 1, got "
                              f"{self.batch_size}")
@@ -170,6 +175,14 @@ class FederationConfig:
 
 
 RoundCallback = Callable[["FederationEngine", int, Dict[str, Any]], None]
+
+
+def _build_mesh(config: FederationConfig):
+    """Client mesh for ``config.devices`` (None => single-device path)."""
+    if config.devices is None:
+        return None
+    from repro.sharding import make_client_mesh
+    return make_client_mesh(config.devices)
 
 
 def _init_federation(ds: FederatedDataset, splits: Sequence[ClientSplit],
@@ -269,11 +282,14 @@ class FederationEngine:
         self.clock: Clock = SyncClock()
         federation.uplink = self.config.uplink
         federation.downlink = self.config.downlink
-        self.clients = ClientRuntime(federation, self.policy, self.config)
+        self.mesh = _build_mesh(self.config)
+        self.clients = ClientRuntime(federation, self.policy, self.config,
+                                     mesh=self.mesh)
         self.bus = ServerBus(federation, self.policy,
                              trigger="every-upload",
                              backend=self.config.backend,
-                             delta=self.config.delta_graph)
+                             delta=self.config.delta_graph,
+                             mesh=self.mesh)
 
     # -- convenience views -------------------------------------------------
     @property
@@ -400,11 +416,14 @@ class AsyncFederationEngine:
         self.clock = Clock()
         federation.uplink = self.config.uplink
         federation.downlink = self.config.downlink
-        self.clients = ClientRuntime(federation, self.policy, self.config)
+        self.mesh = _build_mesh(self.config)
+        self.clients = ClientRuntime(federation, self.policy, self.config,
+                                     mesh=self.mesh)
         self.bus = ServerBus(federation, self.policy,
                              trigger=as_trigger(trigger),
                              backend=self.config.backend,
-                             delta=self.config.delta_graph)
+                             delta=self.config.delta_graph,
+                             mesh=self.mesh)
         self._seeded_until = -1.0
 
     # -- convenience views -------------------------------------------------
@@ -537,19 +556,23 @@ def evaluate(fed: Federation, splits: Sequence[ClientSplit],
     """Per-client accuracy (N,) on the requested split. Cohorts with
     unequal shard lengths are padded + masked — no client's test samples
     are dropped. (Equal lengths keep the original unmasked kernel, which
-    is the bit-exact path the pinned trajectories were captured on.)"""
+    is the bit-exact path the pinned trajectories were captured on.)
+    Device-sharded cohorts evaluate their REAL rows only (``real_params``
+    slices the ghost padding off)."""
     accs = np.zeros(fed.n_clients)
     for coh in fed.cohorts:
+        # getattr: duck-typed cohort stubs (tests) predate real_params
+        params = getattr(coh, "real_params", coh.params)
         shard_x = [getattr(splits[i], f"{which}_x") for i in coh.client_ids]
         shard_y = [getattr(splits[i], f"{which}_y") for i in coh.client_ids]
         lens = {len(y) for y in shard_y}
         if len(lens) == 1:
-            a = cohort_accuracy(coh.apply_fn, coh.params,
+            a = cohort_accuracy(coh.apply_fn, params,
                                 jnp.asarray(np.stack(shard_x)),
                                 jnp.asarray(np.stack(shard_y)))
         else:
             xs, ys, mask = _pad_cohort_shards(shard_x, shard_y)
-            a = cohort_accuracy_masked(coh.apply_fn, coh.params,
+            a = cohort_accuracy_masked(coh.apply_fn, params,
                                        jnp.asarray(xs), jnp.asarray(ys),
                                        jnp.asarray(mask))
         accs[coh.client_ids] = np.asarray(a)
@@ -568,7 +591,9 @@ def precision_recall(fed: Federation, splits: Sequence[ClientSplit],
         xs, ys, mask = _pad_cohort_shards(
             [splits[i].test_x for i in coh.client_ids],
             [splits[i].test_y for i in coh.client_ids])
-        pred = np.asarray(cohort_pred(coh.apply_fn, coh.params,
+        pred = np.asarray(cohort_pred(coh.apply_fn,
+                                      getattr(coh, "real_params",
+                                              coh.params),
                                       jnp.asarray(xs)))
         for c in range(n_classes):
             tp[c] += np.sum((pred == c) & (ys == c) & mask)

@@ -104,6 +104,12 @@ class ServerPolicy(abc.ABC):
     name: str = "?"                 # bound by @register_policy
     uses_reference: bool = True     # False => no messengers, no server round
     computes_similarity: bool = False  # True => graph.similarity -> state.sim
+    # Client device mesh (repro.sharding.make_client_mesh), attached by the
+    # ServerBus when the engine runs device-sharded: policies whose graph
+    # build scales with the population (SQMD's O(N²·R·C) divergence) shard
+    # it row-wise over this mesh. An ATTRIBUTE rather than a hook kwarg so
+    # third-party build_graph overrides keep their signature.
+    mesh = None
 
     def __init__(self, protocol: Optional["Protocol"] = None):  # noqa: F821
         if protocol is None:

@@ -20,7 +20,10 @@ class SQMDPolicy(ServerPolicy):
 
     def build_graph(self, state, quality: jnp.ndarray, *,
                     backend: Optional[str] = None):
-        div = sim_mod.divergence_matrix(state.repo_logp, backend=backend)
+        # self.mesh (bus-attached) shards the O(N²·R·C) rebuild row-wise
+        # over the client mesh; None is the single-device oracle
+        div = sim_mod.divergence_matrix(state.repo_logp, backend=backend,
+                                        mesh=self.mesh)
         return self._select(state, quality, div)
 
     def build_graph_delta(self, state, quality: jnp.ndarray, uploaded, *,

@@ -36,10 +36,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import wire
-from repro.core.client import (cohort_messenger_upload, cohort_step)
+from repro.core.client import (cohort_messenger_upload, cohort_step,
+                               sharded_cohort_step,
+                               sharded_messenger_upload)
 from repro.core.server import (policy_round, staleness_summary,
                                upload_messengers)
-from repro.data.pipeline import cohort_batch
+from repro.data.pipeline import cohort_batch, cohort_batch_padded
 
 # --------------------------------------------------------------------------
 # Clock / Event
@@ -249,13 +251,27 @@ class ClientRuntime:
     Messengers leave here wire-encoded: each cohort's upload fuses its
     forward pass with the ``uplink`` codec's encode, and
     ``collect_messengers`` assembles the per-cohort Payloads into one
-    N-stack Payload (the unit the ServerBus meters and decodes)."""
+    N-stack Payload (the unit the ServerBus meters and decodes).
 
-    def __init__(self, federation, policy, config):
+    With a client ``mesh`` the cohorts execute device-sharded: each
+    cohort's stacks are ghost-padded to a device multiple and placed
+    row-sharded over the mesh once at construction, every step runs
+    through the mesh-pinned jits, and ghost rows stay permanently outside
+    the trainable mask (bit-exact no-ops — the PR 3 frozen-client
+    guarantee). Batch indices are drawn at the REAL cohort size, so the
+    sharded run consumes the identical RNG stream as ``mesh=None``."""
+
+    def __init__(self, federation, policy, config, mesh=None):
         self.fed = federation
         self.policy = policy
         self.config = config
+        self.mesh = mesh
         self.ever_woken = np.zeros(federation.n_clients, bool)
+        if mesh is not None:
+            from repro.sharding import place_cohort_stacks
+            for coh in federation.cohorts:
+                if coh.sharding is None:
+                    place_cohort_stacks(coh, mesh)
 
     @property
     def uplink(self) -> wire.Codec:
@@ -272,15 +288,28 @@ class ClientRuntime:
             fed.targets = jnp.full((n, r, c), 1.0 / c, jnp.float32)
         self.ever_woken |= mask_np
         avail = jnp.asarray(mask_np)
+        step = (cohort_step if self.mesh is None
+                else sharded_cohort_step(self.mesh))
         for _ in range(cfg.local_steps):
             for coh in fed.cohorts:
                 fed.rng, sub = jax.random.split(fed.rng)
-                batch = cohort_batch(sub, coh.data, cfg.batch_size)
-                rows = jnp.asarray(coh.client_ids)
-                coh.params, coh.opt_state, _ = cohort_step(
+                if coh.n_pad == 0:
+                    batch = cohort_batch(sub, coh.data, cfg.batch_size)
+                    rows = jnp.asarray(coh.client_ids)
+                    on = avail[rows]
+                else:
+                    batch = cohort_batch_padded(sub, coh.data,
+                                                cfg.batch_size,
+                                                coh.n_clients)
+                    rows = jnp.asarray(coh.padded_ids)
+                    # ghost rows alias the last real client's global id;
+                    # force them out of the trainable mask regardless
+                    on = avail[rows] & (jnp.arange(coh.n_rows)
+                                        < coh.n_clients)
+                coh.params, coh.opt_state, _ = step(
                     coh.apply_fn, fed.optimizer, coh.params, coh.opt_state,
                     batch["x"], batch["y"], fed.ref_x, fed.targets[rows],
-                    avail[rows], self.policy.rho, use_ref)
+                    on, self.policy.rho, use_ref)
 
     def collect_messengers(self,
                            mask_np: Optional[np.ndarray] = None
@@ -290,12 +319,19 @@ class ClientRuntime:
         masked out of the merge anyway)."""
         fed = self.fed
         n, r, c = fed.server.repo_logp.shape
+        up = (cohort_messenger_upload if self.mesh is None
+              else sharded_messenger_upload(self.mesh))
         parts, rows = [], []
         for coh in fed.cohorts:
             if mask_np is not None and not mask_np[coh.client_ids].any():
                 continue
-            parts.append(cohort_messenger_upload(
-                coh.apply_fn, coh.params, fed.ref_x, codec=self.uplink))
+            part = up(coh.apply_fn, coh.params, fed.ref_x,
+                      codec=self.uplink)
+            if coh.n_pad:
+                # ghost rows never upload: slice the payload back to the
+                # real clients before it enters the N-stack
+                part = wire.gather(part, np.arange(coh.n_clients))
+            parts.append(part)
             rows.append(coh.client_ids)
         if not parts:
             return self.uplink.encode(jnp.zeros((n, r, c), jnp.float32))
@@ -337,12 +373,18 @@ class ServerBus:
                                                           Trigger] = None,
                  backend: Optional[str] = None, delta: bool = False,
                  uplink: Union[None, str, wire.Codec] = None,
-                 downlink: Union[None, str, wire.Codec] = None):
+                 downlink: Union[None, str, wire.Codec] = None,
+                 mesh=None):
         self.fed = federation
         self.policy = policy
         self.trigger = as_trigger(trigger)
         self.backend = backend
         self.delta = bool(delta)
+        self.mesh = mesh
+        if mesh is not None:
+            # policies that shard their graph build read the mesh off
+            # themselves (attribute, not hook kwarg — see ServerPolicy)
+            policy.mesh = mesh
         # None => follow the Federation state bundle (engine-seeded,
         # checkpoint-restorable); an explicit codec pins this bus
         self._uplink = uplink
@@ -454,3 +496,43 @@ class ServerBus:
         return staleness_summary(self.last_upload_t,
                                  np.asarray(self.fed.server.active, bool),
                                  now)
+
+    # -- checkpointable state ----------------------------------------------
+    def state_dict(self) -> dict:
+        """The bus's trigger/staleness bookkeeping, as plain arrays/ints
+        (what ``save_federation`` persists). Without it, a restored
+        every-k/quorum bus double-fires or skips its first round and
+        staleness summaries restart from -inf."""
+        return {
+            "last_upload_t": np.asarray(self.last_upload_t, float),
+            "uploads_since_fire": int(self.uploads_since_fire),
+            "fresh_since_fire": np.asarray(self.fresh_since_fire, bool),
+            "n_uploads": int(self.n_uploads),
+            "n_triggers": int(self.n_triggers),
+            "bytes_up": np.asarray(self.bytes_up, float),
+            "bytes_down": np.asarray(self.bytes_down, float),
+        }
+
+    def load_state_dict(self, state: Optional[dict]) -> None:
+        """Restore ``state_dict`` output; ``None`` (a legacy checkpoint
+        with no bus section) resets every counter to the fresh-bus zeros
+        — the documented legacy behaviour, never garbage."""
+        n = self.fed.n_clients
+        if state is None:
+            self.last_upload_t = np.full(n, -np.inf)
+            self.uploads_since_fire = 0
+            self.fresh_since_fire = np.zeros(n, bool)
+            self.n_uploads = 0
+            self.n_triggers = 0
+            self.bytes_up = np.zeros(n)
+            self.bytes_down = np.zeros(n)
+            return
+        # np.array (copy): np.asarray of a restored jnp buffer is a
+        # READ-ONLY view, and these counters are mutated in place
+        self.last_upload_t = np.array(state["last_upload_t"], float)
+        self.uploads_since_fire = int(state["uploads_since_fire"])
+        self.fresh_since_fire = np.array(state["fresh_since_fire"], bool)
+        self.n_uploads = int(state["n_uploads"])
+        self.n_triggers = int(state["n_triggers"])
+        self.bytes_up = np.array(state["bytes_up"], float)
+        self.bytes_down = np.array(state["bytes_down"], float)

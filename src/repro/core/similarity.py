@@ -26,9 +26,59 @@ EPS = 1e-8
 
 
 def divergence_matrix(messengers_logp: jnp.ndarray,
-                      backend: Optional[str] = None) -> jnp.ndarray:
-    """(N,R,C) log-messengers -> (N,N) fp32, D[n,m] = mean_j KL(n || m)."""
+                      backend: Optional[str] = None,
+                      mesh=None) -> jnp.ndarray:
+    """(N,R,C) log-messengers -> (N,N) fp32, D[n,m] = mean_j KL(n || m).
+
+    With a client ``mesh`` (repro.sharding.make_client_mesh) the rebuild
+    shards ROW-WISE: each device computes its own (N/n_dev, N) strip with
+    the rectangular strip kernel against the replicated repository — the
+    same per-row math as the single-device path with no cross-device
+    reductions (XLA's per-shard matmul tiling can still differ at the
+    fp32 ULP level; parity tests assert <= 1e-6). Repositories that don't
+    divide the mesh are padded with a repeated last row and sliced
+    back."""
+    if mesh is not None and _mesh_devices(mesh) > 1:
+        return _divergence_sharded(messengers_logp, mesh, backend)
     return ops.pairwise_kl(messengers_logp, backend=backend)
+
+
+def _mesh_devices(mesh) -> int:
+    from repro.sharding import CLIENT_AXIS
+    return int(mesh.shape.get(CLIENT_AXIS, 1))
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_strip_fn(mesh, backend: Optional[str]):
+    """shard_map'd row-strip rebuild, cached per (mesh, backend) so each
+    repository shape compiles once."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding import CLIENT_AXIS
+
+    def strips(block, full):
+        # block: this device's rows; full: the whole repository
+        # (replicated) — the PR 3 rectangular strip kernel per shard
+        return ops.pairwise_kl_pair(block, full, backend=backend)
+
+    return jax.jit(shard_map(
+        strips, mesh=mesh,
+        in_specs=(P(CLIENT_AXIS, None, None), P(None, None, None)),
+        out_specs=P(CLIENT_AXIS, None)))
+
+
+def _divergence_sharded(messengers_logp: jnp.ndarray, mesh,
+                        backend: Optional[str]) -> jnp.ndarray:
+    n = messengers_logp.shape[0]
+    n_dev = _mesh_devices(mesh)
+    pad = (-n) % n_dev
+    lp = messengers_logp
+    if pad:
+        lp = jnp.concatenate(
+            [lp, jnp.broadcast_to(lp[-1:], (pad,) + lp.shape[1:])])
+    d = _sharded_strip_fn(mesh, backend)(lp, messengers_logp)
+    return d[:n] if pad else d
 
 
 def _bucket_rows(rows: np.ndarray) -> np.ndarray:

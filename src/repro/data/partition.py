@@ -23,13 +23,39 @@ class ClientSplit:
 
 def split_client(x: np.ndarray, y: np.ndarray, seed: int,
                  ratio=(8, 1, 1)) -> ClientSplit:
-    """The paper's 8:1:1 random split per client."""
+    """The paper's 8:1:1 random split per client.
+
+    Tiny shards: the floor arithmetic zeroes out whole splits
+    (``m * 1 // 10 == 0`` for m < 10 empties val; m <= 2 can empty train),
+    and 0-row shards then poison evaluate/pad paths downstream. Whenever
+    ``m`` allows, every split is guaranteed >= 1 sample by stealing from
+    the largest split (train first as donor), prioritizing
+    train > test > val as recipients; splits large enough for the pure
+    ratio are bit-identical to the historical behaviour."""
     rng = np.random.default_rng(seed)
     m = len(y)
     perm = rng.permutation(m)
     total = sum(ratio)
-    n_tr = m * ratio[0] // total
-    n_va = m * ratio[1] // total
+    counts = [m * ratio[0] // total, m * ratio[1] // total]
+    counts.append(m - counts[0] - counts[1])        # remainder -> test
+    prio = (0, 2, 1)                                # train, test, val
+    for i in prio:
+        if counts[i]:
+            continue
+        donor = int(np.argmax(counts))
+        if counts[donor] > 1:
+            counts[donor] -= 1
+            counts[i] += 1
+        else:
+            # fewer samples than splits: a lower-priority split gives up
+            # its only sample (m=1 must yield a trainable client, not a
+            # test-only one)
+            for j in reversed(prio):
+                if counts[j] and prio.index(j) > prio.index(i):
+                    counts[j] -= 1
+                    counts[i] += 1
+                    break
+    n_tr, n_va = counts[0], counts[1]
     idx_tr = perm[:n_tr]
     idx_va = perm[n_tr:n_tr + n_va]
     idx_te = perm[n_tr + n_va:]

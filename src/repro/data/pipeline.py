@@ -2,6 +2,7 @@
 token-stream batching (arch-zoo LM training)."""
 from __future__ import annotations
 
+import functools
 from typing import Dict, Iterator, Tuple
 
 import jax
@@ -22,11 +23,42 @@ def cohort_batch(key, data: Dict[str, jnp.ndarray],
     return {"x": x, "y": y}
 
 
+@functools.partial(jax.jit, static_argnames=("batch_size", "n_real"))
+def cohort_batch_padded(key, data: Dict[str, jnp.ndarray],
+                        batch_size: int, n_real: int
+                        ) -> Dict[str, jnp.ndarray]:
+    """``cohort_batch`` for a ghost-padded cohort stack (device sharding).
+
+    Indices are drawn at the REAL cohort size — threefry values depend on
+    the requested array shape, so drawing (n_rows, B) instead would change
+    every real client's batch and break n_dev parity — then the index
+    block is edge-replicated to the padded row count. Ghost rows therefore
+    gather the last real client's batch from their own (replicated) data
+    rows: the gather stays row-aligned, i.e. shard-local under a client
+    mesh."""
+    n_rows, m = data["y"].shape
+    idx = jax.random.randint(key, (n_real, batch_size), 0, m)
+    pad = n_rows - n_real
+    if pad:
+        idx = jnp.concatenate(
+            [idx, jnp.broadcast_to(idx[-1:], (pad, batch_size))])
+    x = jnp.take_along_axis(data["x"], idx[..., None], axis=1)
+    y = jnp.take_along_axis(data["y"], idx, axis=1)
+    return {"x": x, "y": y}
+
+
 def lm_batches(tokens: jnp.ndarray, batch: int, seq: int,
                seed: int = 0) -> Iterator[Dict[str, jnp.ndarray]]:
-    """Iterate {tokens, labels} next-token batches from a flat stream."""
+    """Iterate {tokens, labels} next-token batches from a flat stream.
+
+    Each sample is a random (seq+1)-token window, so the stream must hold
+    at least ``seq + 2`` tokens (window + at least one valid start)."""
     n = tokens.shape[0]
-    per = batch * (seq + 1)
+    if n < seq + 2:
+        raise ValueError(
+            f"token stream too short for seq={seq}: need at least seq + 2 "
+            f"= {seq + 2} tokens for a random (seq+1)-token window, got "
+            f"{n}; shorten seq or provide more tokens")
     rng = np.random.default_rng(seed)
     while True:
         starts = rng.integers(0, n - seq - 1, size=batch)

@@ -19,6 +19,12 @@ Messenger wire formats (bandwidth accounting lands in the summary):
 
   PYTHONPATH=src python -m repro.launch.federate --uplink int8 \
       --downlink topk:4 --rounds 40
+
+Multi-device client sharding (cohort steps + server divergence rows shard
+over a 1-D client mesh; fake host devices for CPU testing):
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python -m repro.launch.federate --devices 8 --rounds 40
 """
 from __future__ import annotations
 
@@ -93,6 +99,11 @@ def main() -> None:
     ap.add_argument("--local-steps", type=int, default=1)
     ap.add_argument("--eval-every", type=int, default=5)
     ap.add_argument("--backend", choices=("pallas", "interpret", "jnp"))
+    ap.add_argument("--devices", type=int,
+                    help="shard the client axis over this many devices "
+                         "(cohort steps + server divergence rows); on CPU "
+                         "set XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N first. Default: single-device path")
     ap.add_argument("--delta", action="store_true",
                     help="incremental O(u·N) server graph updates from the "
                          "divergence cache (vs full O(N^2) rebuild)")
@@ -162,6 +173,7 @@ def main() -> None:
                               backend=args.backend,
                               delta_graph=args.delta,
                               uplink=args.uplink, downlink=args.downlink,
+                              devices=args.devices,
                               verbose=True)
     t0 = time.time()
     if args.clock == "event":
@@ -204,9 +216,12 @@ def main() -> None:
         summary["schedule"] = args.schedule
     if hist.graph_stats:
         summary["graph"] = hist.graph_stats[-1]
+    if args.devices:
+        summary["devices"] = args.devices
     if args.ckpt:
         from repro.checkpoint import save_federation
-        save_federation(args.ckpt, engine.fed, step=args.rounds)
+        save_federation(args.ckpt, engine.fed, step=args.rounds,
+                        bus=engine.bus)
         summary["ckpt"] = f"{args.ckpt}/step_{args.rounds}.msgpack"
     print(json.dumps(summary, indent=2))
 

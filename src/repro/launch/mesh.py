@@ -16,3 +16,11 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """A 1x1 mesh on whatever single device exists (CPU smoke tests)."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_client_mesh(n_dev=None):
+    """1-D ("clients",) mesh for federation client-axis sharding: cohort
+    stacks and the server's divergence rows shard over it
+    (``FederationConfig(devices=...)``, ``federate --devices``)."""
+    from repro.sharding import make_client_mesh as _make
+    return _make(n_dev)

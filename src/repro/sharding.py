@@ -27,6 +27,7 @@ from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.common import ModelConfig
@@ -341,6 +342,87 @@ def opt_specs(opt_state: Any, pspecs: Any,
 def to_named(spec_tree: Any, mesh: Mesh) -> Any:
     return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# federation client-axis sharding
+# ---------------------------------------------------------------------------
+# The federation's unit of parallelism is the CLIENT, not the tensor: a
+# cohort is a stacked (n_c, ...) pytree advanced by a vmapped step whose
+# rows never interact, so the whole local round shards embarrassingly over
+# a 1-D device mesh along the stacked axis. Cohort sizes are padded up to
+# a device multiple with frozen "ghost" rows (the trainable-mask gating
+# makes a frozen row a bit-exact no-op), and the server's O(N²·R·C)
+# divergence rebuild shards row-wise over the same axis
+# (similarity.divergence_matrix(mesh=...)).
+
+CLIENT_AXIS = "clients"
+
+
+def make_client_mesh(n_dev: Optional[int] = None) -> Mesh:
+    """1-D ("clients",) mesh over the first ``n_dev`` devices (default: all
+    available). On a CPU host, fake device counts for testing come from
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (set BEFORE jax
+    is imported)."""
+    devs = jax.devices()
+    n_dev = len(devs) if n_dev is None else int(n_dev)
+    if n_dev < 1:
+        raise ValueError(f"n_dev must be >= 1, got {n_dev}")
+    if n_dev > len(devs):
+        raise ValueError(
+            f"requested {n_dev} devices but only {len(devs)} are visible; "
+            f"on CPU set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{n_dev} before importing jax")
+    return Mesh(np.asarray(devs[:n_dev]), (CLIENT_AXIS,))
+
+
+def client_sharding(mesh: Mesh) -> NamedSharding:
+    """Leading-axis row sharding for stacked per-client arrays."""
+    return NamedSharding(mesh, P(CLIENT_AXIS))
+
+
+def ghost_rows(n: int, n_dev: int) -> int:
+    """Ghost rows needed to pad ``n`` clients to a multiple of ``n_dev``."""
+    return (-n) % n_dev
+
+
+def ghost_pad_stack(tree: Any, pad: int) -> Any:
+    """Append ``pad`` ghost rows to every leaf's leading axis by repeating
+    the last row. Ghosts replicate a REAL row (never zeros) so any
+    apply_fn stays numerically safe on them; the step's trainable mask is
+    what keeps them bit-exact no-ops."""
+    if pad == 0:
+        return tree
+    return jax.tree.map(
+        lambda a: jnp.concatenate(
+            [a, jnp.broadcast_to(a[-1:], (pad,) + a.shape[1:])], axis=0),
+        tree)
+
+
+def place_cohort_stacks(cohort, mesh: Mesh) -> None:
+    """Pad a cohort's stacked arrays (params, opt state, data) to a device
+    multiple with frozen ghost rows and device_put them sharded over the
+    mesh's client axis, in place. Records ``n_pad``/``sharding`` on the
+    cohort so checkpoint restores can re-apply the layout."""
+    if cohort.sharding is not None:
+        raise ValueError(f"cohort {cohort.family_name!r} is already sharded")
+    cohort.n_pad = ghost_rows(cohort.n_clients, mesh.shape[CLIENT_AXIS])
+    cohort.sharding = client_sharding(mesh)
+    repad_cohort_arrays(cohort)
+    cohort.data = jax.device_put(ghost_pad_stack(cohort.data, cohort.n_pad),
+                                 cohort.sharding)
+
+
+def repad_cohort_arrays(cohort) -> None:
+    """Re-apply a sharded cohort's ghost padding + device placement to its
+    params and optimizer state (used after a checkpoint restore overwrites
+    them with real-row-only arrays)."""
+    if cohort.sharding is None:
+        return
+    put = lambda t: jax.device_put(  # noqa: E731
+        ghost_pad_stack(t, cohort.n_pad), cohort.sharding)
+    cohort.params = put(cohort.params)
+    cohort.opt_state = put(cohort.opt_state)
 
 
 def make_fsdp_gather_hook(cfg: ModelConfig, mesh: Mesh):

@@ -34,6 +34,39 @@ def test_candidate_mask_fewer_active_than_q():
     assert m.sum() == 2 and m[0] and m[3]
 
 
+def test_candidate_mask_single_active_and_q_exceeding_n():
+    q = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    one = jnp.asarray([False, False, True, False])
+    m = np.asarray(candidate_mask(q, one, 3))
+    assert m.tolist() == [False, False, True, False]
+    # q > N clamps to the population without erroring
+    m_big = np.asarray(candidate_mask(q, jnp.ones(4, bool), 99))
+    assert m_big.all()
+
+
+def test_candidate_mask_all_inactive_is_all_false():
+    """Degenerate pool: zero active clients (e.g. an eval before anyone
+    joined) must yield an all-False mask — the BIG sentinel scores of
+    inactive rows never leak through top_k into the pool."""
+    q = jnp.asarray([5.0, 1.0, 3.0, 0.5])
+    m = np.asarray(candidate_mask(q, jnp.zeros(4, bool), 2))
+    assert not m.any()
+
+
+def test_server_round_all_inactive_no_nan_downstream():
+    """A full SQMD server round over an all-inactive federation: the empty
+    candidate pool must produce a zero graph and finite (zero) targets —
+    no NaN reaches the clients."""
+    n, r, c = 5, 10, 3
+    labels = jax.random.randint(jax.random.key(0), (r,), 0, c)
+    st = init_server(n, r, c)          # nobody has joined: active all-False
+    st2, targets = server_round(st, sqmd(q=3, k=2), labels, backend="jnp")
+    assert np.isfinite(np.asarray(targets)).all()
+    np.testing.assert_allclose(np.asarray(targets), 0.0)
+    np.testing.assert_allclose(np.asarray(st2.weights), 0.0)
+    assert np.isfinite(np.asarray(st2.sim)).all()
+
+
 def test_quality_ranks_better_model_lower():
     r, c = 30, 4
     labels = jax.random.randint(jax.random.key(1), (r,), 0, c)

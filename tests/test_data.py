@@ -41,6 +41,48 @@ def test_split_ratios():
     assert len(s.train_y) == 80
 
 
+@pytest.mark.parametrize("m", list(range(3, 13)))
+def test_split_client_tiny_shards_never_empty(m):
+    """Regression: m < 10 at the 8:1:1 ratio used to emit an EMPTY val
+    split (m * 1 // 10 == 0), feeding 0-row shards into evaluate/pad
+    paths. Every split must get >= 1 sample (stolen from train), all
+    samples accounted for, no index reused."""
+    x = np.arange(m * 4, dtype=np.float32).reshape(m, 4)
+    y = np.arange(m) % 2
+    s = split_client(x, y, seed=0)
+    lens = (len(s.train_y), len(s.val_y), len(s.test_y))
+    assert min(lens) >= 1, lens
+    assert sum(lens) == m
+    rows = np.concatenate([s.train_x, s.val_x, s.test_x])
+    assert len(np.unique(rows[:, 0])) == m      # disjoint indices
+
+
+def test_split_client_large_shards_unchanged():
+    """The steal logic must not perturb splits big enough for the pure
+    ratio (the pinned fixtures rely on the historical slicing)."""
+    m = 30
+    x = np.arange(m * 2, dtype=np.float32).reshape(m, 2)
+    y = np.arange(m) % 3
+    s = split_client(x, y, seed=4)
+    assert (len(s.train_y), len(s.val_y), len(s.test_y)) == (24, 3, 3)
+    rng = np.random.default_rng(4)
+    perm = rng.permutation(m)
+    np.testing.assert_array_equal(s.train_x, x[perm[:24]])
+    np.testing.assert_array_equal(s.val_x, x[perm[24:27]])
+    np.testing.assert_array_equal(s.test_x, x[perm[27:]])
+
+
+def test_split_client_degenerate_one_and_two_samples():
+    x = np.arange(8, dtype=np.float32).reshape(2, 4)
+    y = np.array([0, 1])
+    s2 = split_client(x, y, seed=0)
+    # two samples: train and test each get one, val stays empty
+    assert (len(s2.train_y), len(s2.val_y), len(s2.test_y)) == (1, 0, 1)
+    s1 = split_client(x[:1], y[:1], seed=0)
+    # a single sample must yield a TRAINABLE client, not a test-only one
+    assert (len(s1.train_y), len(s1.val_y), len(s1.test_y)) == (1, 0, 0)
+
+
 def test_sparsity_keeps_r_percent():
     ds = pad_like(samples_per_client=200)
     s = split_client(ds.client_x[0], ds.client_y[0], seed=0)
@@ -88,3 +130,20 @@ def test_lm_stream_in_vocab():
     t = np.asarray(toks)
     assert t.min() >= 0 and t.max() < 100
     assert len(np.unique(t)) > 30
+
+
+def test_lm_batches_rejects_short_stream():
+    """Regression: a stream with n <= seq + 1 used to surface as a numpy
+    internals traceback from rng.integers(0, n - seq - 1); it must be a
+    clear ValueError naming the requirement."""
+    from repro.data.pipeline import lm_batches
+    toks = lm_token_stream(jax.random.key(0), 100, 16)
+    with pytest.raises(ValueError, match="seq \\+ 2"):
+        next(lm_batches(toks, batch=2, seq=16))
+    with pytest.raises(ValueError, match="too short"):
+        next(lm_batches(toks, batch=2, seq=15))
+    # n == seq + 2 is the smallest legal stream (single valid start)
+    b = next(lm_batches(toks, batch=2, seq=14))
+    assert b["tokens"].shape == (2, 14)
+    np.testing.assert_array_equal(np.asarray(b["tokens"][:, 1:]),
+                                  np.asarray(b["labels"][:, :-1]))

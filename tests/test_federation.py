@@ -136,3 +136,34 @@ def test_checkpoint_roundtrip(tmp_path, setup):
     np.testing.assert_allclose(acc_before, acc_after, atol=1e-6)
     # the wire codec names round-trip with the state
     assert fed2.uplink == "dense32" and fed2.downlink == "dense32"
+
+
+def test_checkpoint_resume_equivalence(tmp_path, setup):
+    """A run interrupted by save/restore must continue EXACTLY like the
+    uninterrupted run: rng, distill targets, and the bus's trigger
+    bookkeeping all resume (a restored engine used to re-derive its RNG
+    and drop the targets, silently forking the trajectory)."""
+    from repro.checkpoint import restore_federation, save_federation
+    ds, splits, zoo, assignment = setup
+
+    oracle = _build(setup, sqmd(q=10, k=4), seed=11, rounds=4)
+    for rnd in range(4):
+        oracle.run_round(rnd)
+
+    first = _build(setup, sqmd(q=10, k=4), seed=11, rounds=4)
+    for rnd in range(2):
+        first.run_round(rnd)
+    save_federation(str(tmp_path), first.fed, step=2, bus=first.bus)
+
+    resumed = _build(setup, sqmd(q=10, k=4), seed=77, rounds=4)  # other seed
+    restore_federation(str(tmp_path), resumed.fed, bus=resumed.bus)
+    for rnd in range(2, 4):
+        resumed.run_round(rnd)
+
+    np.testing.assert_allclose(evaluate(resumed.fed, splits),
+                               evaluate(oracle.fed, splits), atol=1e-7)
+    np.testing.assert_allclose(np.asarray(resumed.fed.server.weights),
+                               np.asarray(oracle.fed.server.weights),
+                               atol=1e-7)
+    assert resumed.bus.n_triggers == oracle.bus.n_triggers
+    np.testing.assert_allclose(resumed.bus.bytes_up, oracle.bus.bytes_up)

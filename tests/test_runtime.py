@@ -366,6 +366,73 @@ def test_staleness_summary_edges():
     assert empty["n"] == 0 and empty["mean"] == 0.0
 
 
+def test_bus_state_roundtrips_through_checkpoint(tmp_path):
+    """Regression: restore_federation round-tripped params/codecs but NOT
+    the bus's trigger counters, so a restored every-k engine double-fired
+    or skipped its first server round. The bus state must resume exactly:
+    the restored bus fires at the same delivery the uninterrupted one
+    does."""
+    from repro.checkpoint import restore_federation, save_federation
+    from repro.core.policies import as_policy
+
+    def mk():
+        fed = _tiny_fed()
+        bus = ServerBus(fed, as_policy(sqmd(q=4, k=2)),
+                        trigger=EveryKUploads(k=3), backend="jnp")
+        return fed, bus
+
+    one = np.zeros(4, bool)
+    one[0] = True
+    other = np.zeros(4, bool)
+    other[1] = True
+
+    fed, bus = mk()
+    assert not bus.deliver(0.0, _msg(0), one)       # 1/3 uploads
+    assert not bus.deliver(1.0, _msg(1), other)     # 2/3
+    save_federation(str(tmp_path), fed, step=1, bus=bus)
+
+    fed2, bus2 = mk()
+    restore_federation(str(tmp_path), fed2, bus=bus2)
+    assert bus2.uploads_since_fire == 2
+    assert bus2.fresh_since_fire.tolist() == bus.fresh_since_fire.tolist()
+    np.testing.assert_array_equal(bus2.last_upload_t, bus.last_upload_t)
+    assert bus2.n_uploads == 2 and bus2.n_triggers == 0
+    np.testing.assert_array_equal(bus2.bytes_up, bus.bytes_up)
+
+    # the third delivery fires BOTH buses — neither early nor late
+    third = np.zeros(4, bool)
+    third[2] = True
+    assert bus.deliver(2.0, _msg(2), third)
+    assert bus2.deliver(2.0, _msg(2), third)
+    assert bus.n_triggers == bus2.n_triggers == 1
+    # staleness bookkeeping resumed too (content ages, not -inf resets)
+    assert bus.staleness(3.0) == bus2.staleness(3.0)
+
+
+def test_bus_legacy_checkpoint_restores_zeroed_counters(tmp_path):
+    """A checkpoint written WITHOUT a bus (the legacy format) restores a
+    used bus to the fresh-bus zeros — a restored every-k engine then
+    counts from scratch instead of inheriting garbage."""
+    from repro.checkpoint import restore_federation, save_federation
+    from repro.core.policies import as_policy
+    fed = _tiny_fed()
+    save_federation(str(tmp_path), fed, step=0)     # no bus section
+    fed2 = _tiny_fed()
+    bus2 = ServerBus(fed2, as_policy(sqmd(q=4, k=2)),
+                     trigger=EveryKUploads(k=2), backend="jnp")
+    bus2.deliver(0.0, _msg(0), np.ones(4, bool))    # dirty the counters
+    restore_federation(str(tmp_path), fed2, bus=bus2)
+    assert bus2.uploads_since_fire == 0
+    assert not bus2.fresh_since_fire.any()
+    assert bus2.n_uploads == 0 and bus2.n_triggers == 0
+    assert np.isinf(bus2.last_upload_t).all()
+    assert bus2.bytes_up.sum() == 0
+    one = np.zeros(4, bool)
+    one[3] = True
+    assert not bus2.deliver(1.0, _msg(1), one)      # 1/2: must NOT fire
+    assert bus2.deliver(2.0, _msg(2), np.ones(4, bool))
+
+
 # --- async regimes end-to-end ---------------------------------------------
 
 def test_async_straggler_latency_regime(setup_small):
