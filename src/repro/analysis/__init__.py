@@ -1,0 +1,33 @@
+"""JAX-aware static analysis for the repro codebase.
+
+Rule families (see ``repro.analysis.registry``):
+
+  * ``jaxpr``  — trace the real entry points, audit PRNG discipline,
+    masked state updates, and dtype drift on the jaxpr.
+  * ``hlo``    — lower the sharded hot paths, assert the zero-collective
+    invariant and jit-cache bucketing on compiled HLO.
+  * ``pallas`` — intercept ``pallas_call`` and validate grid/block
+    divisibility against actual operand shapes.
+  * ``lint``   — AST checks: bare asserts, hardcoded ``interpret``
+    defaults, unregistered registry names.
+
+Importing this package registers every built-in rule. Run the gate with
+``python -m repro.launch.analyze``.
+"""
+from repro.analysis.registry import (AnalysisContext, Rule, RuleResult,
+                                     Violation, get_rule, load_baseline,
+                                     register_rule, registered_rules,
+                                     rules_for, run_rules, unregister_rule,
+                                     write_baseline)
+
+# import for registration side effects
+from repro.analysis import jaxpr_rules  # noqa: E402,F401
+from repro.analysis import hlo_rules  # noqa: E402,F401
+from repro.analysis import pallas_rules  # noqa: E402,F401
+from repro.analysis import lint_rules  # noqa: E402,F401
+
+__all__ = [
+    "AnalysisContext", "Rule", "RuleResult", "Violation",
+    "get_rule", "register_rule", "registered_rules", "rules_for",
+    "run_rules", "unregister_rule", "load_baseline", "write_baseline",
+]

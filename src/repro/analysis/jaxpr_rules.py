@@ -1,0 +1,171 @@
+"""Jaxpr auditors: PRNG discipline, masked updates, dtype drift.
+
+Each rule traces the real entry points (``fixtures.build_entries``) and
+delegates to an ``audit_*`` helper that takes a jaxpr directly — the
+mutation tests drive those helpers with seeded-bug variants to prove the
+detectors actually fire.
+"""
+from __future__ import annotations
+
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.analysis import fixtures, jaxprlib
+from repro.analysis.registry import AnalysisContext, Violation, register_rule
+
+
+# --------------------------------------------------------------------------
+# audit helpers (rule bodies, callable on arbitrary jaxprs)
+# --------------------------------------------------------------------------
+
+def audit_key_reuse(where: str, closed) -> List[Violation]:
+    """Same key value consumed by >= 2 random draws (or a draw plus a
+    split/fold_in): overlapping random streams."""
+    out = []
+    for i, (vid, events) in enumerate(jaxprlib.key_reuse_events(closed)):
+        prims = ", ".join(e.prim for e in events)
+        out.append(Violation(
+            "prng-key-reuse", f"{where}#key{i}",
+            f"one key value consumed {len(events)}x ({prims}); derive "
+            f"per-use keys with jax.random.split/fold_in instead"))
+    return out
+
+
+def audit_padded_draws(where: str, closed,
+                       padded: Tuple[int, int]) -> List[Violation]:
+    """Random draws at the ghost-padded dimension (PR 5 bug class):
+    threefry values depend on the requested shape, so a draw at
+    ``padded_dim`` instead of ``real_dim`` changes every REAL client's
+    stream whenever the device count (and hence the pad) changes."""
+    padded_dim, real_dim = padded
+    if padded_dim == real_dim:
+        return []
+    out = []
+    for i, (shape, eqn_str) in enumerate(
+            jaxprlib.random_draw_shapes(closed)):
+        if padded_dim in shape:
+            out.append(Violation(
+                "padded-shape-key-draw", f"{where}#draw{i}",
+                f"random draw at shape {shape} includes the padded row "
+                f"count {padded_dim}; draw at the real count {real_dim} "
+                f"and edge-replicate the pad (see "
+                f"data/pipeline.cohort_batch_padded)"))
+    return out
+
+
+def audit_masked_update(wrapper, args, leaf_counts: Sequence[int],
+                        gate_arg: int, checked_args: Sequence[int],
+                        where: str,
+                        arg_names: Optional[Sequence[str]] = None
+                        ) -> List[Violation]:
+    """Every output leaf originating from ``checked_args`` (state pytrees
+    that a frozen client must not advance) must DEPEND on the
+    ``gate_arg`` input (the trainable mask) — a leaf with no such
+    dependence escapes the freeze (PR 3 frozen-client bug class).
+
+    Output order is assumed to mirror ``checked_args`` order leaf-for-leaf
+    (the step returns updated versions of its state inputs first), which
+    ``jax.eval_shape`` verifies by leaf count."""
+    closed = jax.make_jaxpr(wrapper)(*args)
+    deps = jaxprlib.output_dependencies(closed)
+
+    # flattened invar index ranges per positional argument
+    starts = []
+    pos = 0
+    for n in leaf_counts:
+        starts.append(pos)
+        pos += n
+    if pos != len(closed.jaxpr.invars):
+        raise ValueError(
+            f"leaf_counts sum {pos} != invar count "
+            f"{len(closed.jaxpr.invars)} — fixture out of sync")
+    gate_positions = set(range(starts[gate_arg],
+                               starts[gate_arg] + leaf_counts[gate_arg]))
+
+    names = list(arg_names) if arg_names else \
+        [f"arg{i}" for i in range(len(leaf_counts))]
+    # output leaf paths, for readable reports
+    out_shape = jax.eval_shape(wrapper, *args)
+    out_paths = [jax.tree_util.keystr(kp) for kp, _ in
+                 jax.tree_util.tree_leaves_with_path(out_shape)]
+
+    out = []
+    cursor = 0
+    for a in checked_args:
+        n = leaf_counts[a]
+        for leaf_i in range(n):
+            oi = cursor + leaf_i
+            if not (deps[oi] & gate_positions):
+                path = out_paths[oi] if oi < len(out_paths) else f"[{oi}]"
+                out.append(Violation(
+                    "unmasked-optimizer-leaf", f"{where}#{names[a]}{path}",
+                    f"updated {names[a]} leaf {path} does not depend on "
+                    f"the trainable mask — a frozen client's state would "
+                    f"silently advance; gate EVERY leaf (jnp.where(on, "
+                    f"new, old))"))
+        cursor += n
+    return out
+
+
+def audit_downcasts(where: str, closed) -> List[Violation]:
+    """Silent fp32 -> bf16/f16 (or float -> int8/uint8 quantization)
+    outside the wire-codec boundary."""
+    out = []
+    seen = set()
+    for d in jaxprlib.find_downcasts(closed):
+        sig = (d.src, d.dst)
+        if sig in seen:
+            continue
+        seen.add(sig)
+        out.append(Violation(
+            "fp32-downcast-outside-codec", f"{where}#{d.src}->{d.dst}",
+            f"{d.src} -> {d.dst} conversion in a non-codec entry point; "
+            f"precision drops belong in wire codecs (core/wire.py), not "
+            f"the compute path"))
+    return out
+
+
+# --------------------------------------------------------------------------
+# registered rules
+# --------------------------------------------------------------------------
+
+@register_rule("prng-key-reuse", family="jaxpr")
+def prng_key_reuse(ctx: AnalysisContext) -> Iterable[Violation]:
+    """Trace every entry point; flag key values feeding >= 2 random
+    primitives without an intervening split/fold_in."""
+    for name, entry in sorted(fixtures.build_entries(ctx).items()):
+        yield from audit_key_reuse(name, entry.jaxpr)
+
+
+@register_rule("padded-shape-key-draw", family="jaxpr")
+def padded_shape_key_draw(ctx: AnalysisContext) -> Iterable[Violation]:
+    """Flag random draws whose requested shape includes a ghost-padded
+    dimension (PR 5 bug class)."""
+    for name, entry in sorted(fixtures.build_entries(ctx).items()):
+        if entry.padded is not None:
+            yield from audit_padded_draws(name, entry.jaxpr, entry.padded)
+
+
+@register_rule("unmasked-optimizer-leaf", family="jaxpr")
+def unmasked_optimizer_leaf(ctx: AnalysisContext) -> Iterable[Violation]:
+    """Flag params/optimizer-state output leaves of the cohort step that
+    do not depend on the trainable mask (PR 3 frozen-client class)."""
+    wrapper, args, leaf_counts = fixtures.cohort_step_probe()
+    # wrapper(params, opt_state, bx, by, ref_x, targets, trainable):
+    # outputs (new_params, new_opt_state, loss) — check args 0 and 1,
+    # gate is arg 6
+    yield from audit_masked_update(
+        wrapper, args, leaf_counts, gate_arg=6, checked_args=(0, 1),
+        where="cohort_step",
+        arg_names=("params", "opt_state", "bx", "by", "ref_x", "targets",
+                   "trainable"))
+
+
+@register_rule("fp32-downcast-outside-codec", family="jaxpr")
+def fp32_downcast_outside_codec(ctx: AnalysisContext) -> Iterable[Violation]:
+    """Flag precision-dropping converts in entry points that are NOT wire
+    codecs (the codec boundary is the one sanctioned quantization site)."""
+    for name, entry in sorted(fixtures.build_entries(ctx).items()):
+        if not entry.codec_boundary:
+            yield from audit_downcasts(name, entry.jaxpr)

@@ -1,0 +1,204 @@
+"""AST lint rules over the ``src/repro`` tree.
+
+Pure-python checks that need no tracing: bare ``assert`` in library code
+(stripped under ``python -O``), hardcoded ``interpret=True/False``
+defaults (must route through ``kernels.backend.default_interpret`` so
+CPU CI and TPU runs pick the right mode), and string registry lookups
+that name nothing registered (typo'd ``get_policy("sqdm")`` should die
+in CI, not at round 40).
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, Iterable, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.registry import AnalysisContext, Violation, register_rule
+
+
+def _parse(path: Path) -> Optional[ast.AST]:
+    try:
+        return ast.parse(path.read_text(), filename=str(path))
+    except SyntaxError:
+        return None     # surfaced by import anyway; not a lint concern
+
+
+def _rel(ctx: AnalysisContext, path: Path) -> str:
+    try:
+        return str(path.relative_to(ctx.root))
+    except ValueError:
+        return str(path)
+
+
+def _iter_trees(ctx: AnalysisContext
+                ) -> Iterator[Tuple[Path, ast.AST]]:
+    cached = ctx.cache.get("ast_trees")
+    if cached is None:
+        cached = []
+        for path in ctx.python_files():
+            tree = _parse(path)
+            if tree is not None:
+                cached.append((path, tree))
+        ctx.cache["ast_trees"] = cached
+    return iter(cached)
+
+
+# --------------------------------------------------------------------------
+# bare assert
+# --------------------------------------------------------------------------
+
+def find_bare_asserts(tree: ast.AST, relpath: str) -> List[Violation]:
+    """``assert`` in library code vanishes under ``python -O``; guards
+    must raise typed exceptions. Pallas kernel bodies (functions named
+    ``_kernel*`` or ``*_kernel``) are exempt — asserts there are
+    trace-time shape checks that never reach runtime bytecode."""
+    out = []
+    exempt_spans: List[Tuple[int, int]] = []
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) and \
+                (node.name.startswith("_kernel")
+                 or node.name.endswith("_kernel")):
+            exempt_spans.append((node.lineno, node.end_lineno or node.lineno))
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Assert):
+            continue
+        if any(lo <= node.lineno <= hi for lo, hi in exempt_spans):
+            continue
+        out.append(Violation(
+            "bare-assert", f"{relpath}:{node.lineno}",
+            "bare assert in library code is stripped under python -O; "
+            "raise ValueError/RuntimeError instead"))
+    return out
+
+
+@register_rule("bare-assert", family="lint")
+def bare_assert(ctx: AnalysisContext) -> Iterable[Violation]:
+    """No ``assert`` statements in ``src/repro`` outside kernel bodies."""
+    for path, tree in _iter_trees(ctx):
+        yield from find_bare_asserts(tree, _rel(ctx, path))
+
+
+# --------------------------------------------------------------------------
+# literal interpret defaults
+# --------------------------------------------------------------------------
+
+def find_literal_interpret(tree: ast.AST, relpath: str) -> List[Violation]:
+    """An ``interpret=True``/``False`` literal default (or a literal
+    assignment inside a function that takes ``interpret``) pins the mode
+    regardless of platform; the default must be ``None`` resolved via
+    ``kernels.backend.default_interpret()``."""
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        arglist = node.args
+        params = (arglist.posonlyargs + arglist.args + arglist.kwonlyargs)
+        defaults = ([None] * (len(arglist.posonlyargs + arglist.args)
+                              - len(arglist.defaults))
+                    + list(arglist.defaults) + list(arglist.kw_defaults))
+        has_interpret = False
+        for param, default in zip(params, defaults):
+            if param.arg != "interpret":
+                continue
+            has_interpret = True
+            if isinstance(default, ast.Constant) and \
+                    isinstance(default.value, bool):
+                out.append(Violation(
+                    "literal-interpret-default",
+                    f"{relpath}:{node.lineno}",
+                    f"def {node.name}(... interpret={default.value} ...): "
+                    f"hardcoded interpret default; use interpret=None and "
+                    f"kernels.backend.resolve_interpret"))
+        if not has_interpret:
+            continue
+        for inner in ast.walk(node):
+            if isinstance(inner, ast.Assign) and \
+                    isinstance(inner.value, ast.Constant) and \
+                    isinstance(inner.value.value, bool) and \
+                    any(isinstance(t, ast.Name) and t.id == "interpret"
+                        for t in inner.targets):
+                out.append(Violation(
+                    "literal-interpret-default",
+                    f"{relpath}:{inner.lineno}",
+                    f"interpret = {inner.value.value} overrides the "
+                    f"platform-resolved mode inside {node.name}; use "
+                    f"kernels.backend.resolve_interpret"))
+    return out
+
+
+@register_rule("literal-interpret-default", family="lint")
+def literal_interpret_default(ctx: AnalysisContext) -> Iterable[Violation]:
+    """No hardcoded ``interpret=True/False`` defaults in kernel entry
+    points."""
+    for path, tree in _iter_trees(ctx):
+        yield from find_literal_interpret(tree, _rel(ctx, path))
+
+
+# --------------------------------------------------------------------------
+# unregistered registry names
+# --------------------------------------------------------------------------
+
+def _live_registries() -> Dict[str, Set[str]]:
+    """Lookup-function name -> the set of names its registry knows.
+    Imports ``repro.core`` so decorator registration has run."""
+    import repro.core  # noqa: F401  (populates policy/codec registries)
+    from repro.analysis.registry import registered_rules
+    from repro.core.policies.base import registered_policies
+    from repro.core.runtime import registered_triggers
+    from repro.core.schedules import registered_arrivals, \
+        registered_schedules
+    from repro.core.wire import registered_codecs
+
+    policies = set(registered_policies())
+    codecs = set(registered_codecs())
+    triggers = set(registered_triggers())
+    schedules = set(registered_schedules())
+    arrivals = set(registered_arrivals())
+    rules = set(registered_rules())
+    return {
+        "get_policy": policies, "as_policy": policies,
+        "get_codec": codecs, "as_codec": codecs,
+        "get_trigger": triggers, "as_trigger": triggers,
+        "get_schedule": schedules, "as_schedule": schedules,
+        "get_arrivals": arrivals, "as_arrivals": arrivals,
+        "get_rule": rules,
+    }
+
+
+def find_unregistered_names(tree: ast.AST, relpath: str,
+                            registries: Dict[str, Set[str]]
+                            ) -> List[Violation]:
+    """Registry lookups with a literal-string first argument naming
+    nothing registered. ``as_*`` specs carry ``name:arg`` suffixes —
+    validate the name part only."""
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        fn_name = fn.id if isinstance(fn, ast.Name) else \
+            fn.attr if isinstance(fn, ast.Attribute) else None
+        if fn_name not in registries or not node.args:
+            continue
+        arg = node.args[0]
+        if not (isinstance(arg, ast.Constant) and isinstance(arg.value, str)):
+            continue
+        name = arg.value
+        if fn_name.startswith("as_"):
+            name = name.partition(":")[0]
+        if name not in registries[fn_name]:
+            out.append(Violation(
+                "unregistered-registry-name", f"{relpath}:{node.lineno}",
+                f"{fn_name}({arg.value!r}) names nothing registered; "
+                f"known: {', '.join(sorted(registries[fn_name]))}"))
+    return out
+
+
+@register_rule("unregistered-registry-name", family="lint")
+def unregistered_registry_name(ctx: AnalysisContext) -> Iterable[Violation]:
+    """Every literal-string registry lookup must name a registered
+    entry."""
+    registries = _live_registries()
+    for path, tree in _iter_trees(ctx):
+        yield from find_unregistered_names(tree, _rel(ctx, path),
+                                           registries)

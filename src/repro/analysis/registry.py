@@ -1,0 +1,230 @@
+"""The static-analysis rule registry + runner.
+
+A rule is a function that inspects the repo (through an
+``AnalysisContext``) and yields ``Violation``s. Rules register by name
+under one of four families — mirroring the policy/codec/trigger registry
+idiom, so new checks drop in as
+
+    @register_rule("my-check", family="jaxpr")
+    def my_check(ctx):
+        yield Violation("my-check", "entry", "what went wrong")
+
+and become runnable from ``launch/analyze.py`` and the CI gate with zero
+changes to the runner.
+
+Families:
+
+  jaxpr   — trace real entry points with ``jax.make_jaxpr`` and walk the
+            equations (PRNG discipline, masked updates, dtype drift)
+  hlo     — lower sharded paths and audit the compiled module text
+            (collectives, recompile/bucketing behavior)
+  pallas  — intercept ``pallas_call`` invocations and validate grids
+  lint    — AST checks over ``src/repro`` source text
+
+A ``baseline`` (set of ``Violation.key`` strings) suppresses known,
+accepted findings; the repo's own gate runs with an EMPTY baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import traceback
+from pathlib import Path
+from typing import (Callable, Dict, FrozenSet, Iterable, List, Optional,
+                    Sequence, Tuple)
+
+FAMILIES = ("jaxpr", "hlo", "pallas", "lint")
+
+# result states a rule run can end in; "error" fails the gate like a
+# violation does — a crashing auditor must never read as a passing one
+STATUS_OK = "ok"
+STATUS_VIOLATION = "violation"
+STATUS_SKIPPED = "skipped"
+STATUS_ERROR = "error"
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One finding. ``where`` is the stable location (entry-point name or
+    ``path:line``) and, with the rule name, forms the baseline key;
+    ``message`` carries the human detail and stays out of the key so
+    shape/value churn does not invalidate a baseline entry."""
+    rule: str
+    where: str
+    message: str
+
+    @property
+    def key(self) -> str:
+        return f"{self.rule}::{self.where}"
+
+    def as_dict(self) -> Dict[str, str]:
+        return {"rule": self.rule, "where": self.where,
+                "message": self.message, "key": self.key}
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    name: str
+    family: str
+    fn: Callable[["AnalysisContext"], Iterable[Violation]]
+    doc: str = ""
+    # minimum jax.device_count() the rule needs (sharded HLO audits want
+    # the forced 8-device host platform); short counts report "skipped"
+    requires_devices: int = 1
+
+
+@dataclasses.dataclass
+class RuleResult:
+    rule: str
+    family: str
+    status: str
+    violations: List[Violation] = dataclasses.field(default_factory=list)
+    suppressed: int = 0              # baselined findings
+    detail: str = ""                 # skip reason / error traceback
+
+    @property
+    def failed(self) -> bool:
+        return self.status in (STATUS_VIOLATION, STATUS_ERROR)
+
+    def as_dict(self) -> dict:
+        return {"rule": self.rule, "family": self.family,
+                "status": self.status, "detail": self.detail,
+                "suppressed": self.suppressed,
+                "violations": [v.as_dict() for v in self.violations]}
+
+
+_REGISTRY: Dict[str, Rule] = {}
+
+
+def register_rule(name: str, family: str, requires_devices: int = 1):
+    """Decorator: ``@register_rule("prng-key-reuse", family="jaxpr")``."""
+
+    def deco(fn):
+        if not isinstance(name, str) or not name:
+            raise ValueError(f"rule name must be a non-empty str: {name!r}")
+        if family not in FAMILIES:
+            raise ValueError(f"unknown rule family {family!r}; expected "
+                             f"one of {FAMILIES}")
+        if name in _REGISTRY:
+            raise ValueError(f"rule {name!r} already registered "
+                             f"({_REGISTRY[name].fn.__qualname__})")
+        if not callable(fn):
+            raise TypeError(f"@register_rule expects a callable, got "
+                            f"{fn!r}")
+        _REGISTRY[name] = Rule(name=name, family=family, fn=fn,
+                               doc=(fn.__doc__ or "").strip(),
+                               requires_devices=requires_devices)
+        return fn
+
+    return deco
+
+
+def unregister_rule(name: str) -> None:
+    """Remove a rule (test teardown helper)."""
+    _REGISTRY.pop(name, None)
+
+
+def registered_rules() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_rule(name: str) -> Rule:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown rule {name!r}; registered: "
+                       f"{registered_rules()}") from None
+
+
+def rules_for(families: Optional[Sequence[str]] = None,
+              names: Optional[Sequence[str]] = None) -> List[Rule]:
+    """Selected rules in (family, name) order — the runner's iteration."""
+    if names:
+        picked = [get_rule(n) for n in names]
+    else:
+        picked = list(_REGISTRY.values())
+    if families:
+        for f in families:
+            if f not in FAMILIES:
+                raise ValueError(f"unknown rule family {f!r}; expected "
+                                 f"one of {FAMILIES}")
+        picked = [r for r in picked if r.family in families]
+    return sorted(picked, key=lambda r: (r.family, r.name))
+
+
+class AnalysisContext:
+    """What a rule sees: the repo root plus a shared cache so expensive
+    artifacts (traced jaxprs, parsed ASTs, probe fixtures) are built once
+    per run, not once per rule."""
+
+    def __init__(self, root: Optional[Path] = None):
+        if root is None:
+            # src/repro/analysis/registry.py -> src/repro
+            root = Path(__file__).resolve().parent.parent
+        self.root = Path(root)
+        self.cache: Dict[str, object] = {}
+
+    def python_files(self) -> List[Path]:
+        key = "python_files"
+        if key not in self.cache:
+            self.cache[key] = sorted(self.root.rglob("*.py"))
+        return self.cache[key]  # type: ignore[return-value]
+
+
+def run_rules(ctx: Optional[AnalysisContext] = None,
+              families: Optional[Sequence[str]] = None,
+              names: Optional[Sequence[str]] = None,
+              baseline: FrozenSet[str] = frozenset()) -> List[RuleResult]:
+    """Run the selected rules, filter baselined findings, never raise —
+    a crashing rule becomes a ``STATUS_ERROR`` result."""
+    import jax
+
+    if ctx is None:
+        ctx = AnalysisContext()
+    n_dev = jax.device_count()
+    results: List[RuleResult] = []
+    for rule in rules_for(families, names):
+        if n_dev < rule.requires_devices:
+            results.append(RuleResult(
+                rule.name, rule.family, STATUS_SKIPPED,
+                detail=f"needs {rule.requires_devices} devices, have "
+                       f"{n_dev} (set XLA_FLAGS=--xla_force_host_platform"
+                       f"_device_count={rule.requires_devices})"))
+            continue
+        try:
+            found = list(rule.fn(ctx))
+        except Exception:
+            results.append(RuleResult(rule.name, rule.family, STATUS_ERROR,
+                                      detail=traceback.format_exc()))
+            continue
+        live = [v for v in found if v.key not in baseline]
+        results.append(RuleResult(
+            rule.name, rule.family,
+            STATUS_VIOLATION if live else STATUS_OK,
+            violations=live, suppressed=len(found) - len(live)))
+    return results
+
+
+# --------------------------------------------------------------------------
+# baseline files: a JSON list of Violation.key strings
+# --------------------------------------------------------------------------
+
+def load_baseline(path) -> FrozenSet[str]:
+    p = Path(path)
+    if not p.exists():
+        raise FileNotFoundError(f"baseline file not found: {p}")
+    data = json.loads(p.read_text())
+    keys = data["suppressed"] if isinstance(data, dict) else data
+    if not isinstance(keys, list) or \
+            not all(isinstance(k, str) for k in keys):
+        raise ValueError(f"baseline {p} must be a JSON list of violation "
+                         f"keys (or {{'suppressed': [...]}}), got "
+                         f"{type(keys).__name__}")
+    return frozenset(keys)
+
+
+def write_baseline(path, results: Sequence[RuleResult]) -> int:
+    """Persist every live violation key; returns the count written."""
+    keys = sorted({v.key for r in results for v in r.violations})
+    Path(path).write_text(json.dumps({"suppressed": keys}, indent=2) + "\n")
+    return len(keys)

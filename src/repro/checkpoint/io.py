@@ -135,7 +135,11 @@ def restore_federation(ckpt_dir: str, fed, step: Optional[int] = None,
     if "targets" in tree:
         fed.targets = tree["targets"]
     for c, saved in zip(fed.cohorts, tree["cohorts"]):
-        assert c.family_name == saved["family"], "cohort layout changed"
+        if c.family_name != saved["family"]:
+            # ValueError (not assert): guard must survive python -O
+            raise ValueError(
+                f"cohort layout changed: checkpoint family "
+                f"{saved['family']!r} != live cohort {c.family_name!r}")
         c.params = saved["params"]
         c.opt_state = _optstate_from_tree(saved["opt_state"],
                                           c.real_opt_state)

@@ -1,0 +1,95 @@
+"""Shared kernel-backend resolution for every Pallas kernel wrapper.
+
+One place answers two questions the kernel modules used to answer
+independently (and therefore inconsistently — see PR 6's lint rule
+``literal-interpret-default``):
+
+  * ``default_backend()`` — which dispatch path (``"pallas"`` /
+    ``"interpret"`` / ``"jnp"``) ``ops.*`` wrappers use when the caller
+    passes ``backend=None``.
+  * ``default_interpret()`` / ``resolve_interpret()`` — whether a direct
+    ``pallas_call`` wrapper runs compiled or under the Pallas interpreter
+    when the caller passes ``interpret=None``.
+
+Both honor the ``REPRO_KERNEL_BACKEND`` environment variable so a whole
+process (CI lane, benchmark, federate run) can be pinned to one path
+without threading a flag through every call site:
+
+  * ``REPRO_KERNEL_BACKEND=pallas``    -> backend "pallas", interpret False
+  * ``REPRO_KERNEL_BACKEND=interpret`` -> backend "interpret", interpret True
+  * ``REPRO_KERNEL_BACKEND=jnp``       -> backend "jnp", interpret True
+    (direct kernel calls still run, safely, under the interpreter)
+
+Without the override the defaults come from the platform: "pallas" /
+compiled on TPU, "jnp" / interpreter everywhere else, so a direct caller
+never silently runs the Python interpreter on real hardware.
+
+This module deliberately imports nothing from the kernel modules —
+``ops.py`` imports all of them at module scope, so the helper must sit
+below them to avoid an import cycle.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+VALID_BACKENDS = ("pallas", "interpret", "jnp")
+ENV_VAR = "REPRO_KERNEL_BACKEND"
+
+_DEFAULT_BACKEND: Optional[str] = None
+
+
+def _env_backend() -> Optional[str]:
+    env = os.environ.get(ENV_VAR)
+    if env is None or env == "":
+        return None
+    if env not in VALID_BACKENDS:
+        # ValueError (not assert) so the guard survives python -O
+        raise ValueError(f"{ENV_VAR}={env!r} is not a valid backend; "
+                         f"expected one of {VALID_BACKENDS}")
+    return env
+
+
+def default_backend() -> str:
+    """Dispatch path used when ``backend=None``: the ``set_default_backend``
+    override, else ``$REPRO_KERNEL_BACKEND``, else the platform default."""
+    global _DEFAULT_BACKEND
+    if _DEFAULT_BACKEND is None:
+        env = _env_backend()
+        if env is not None:
+            _DEFAULT_BACKEND = env
+        else:
+            platform = jax.devices()[0].platform
+            _DEFAULT_BACKEND = "pallas" if platform == "tpu" else "jnp"
+    return _DEFAULT_BACKEND
+
+
+def set_default_backend(name: str) -> None:
+    global _DEFAULT_BACKEND
+    if name not in VALID_BACKENDS:
+        # ValueError (not assert) so the guard survives python -O
+        raise ValueError(f"unknown backend {name!r}; expected 'pallas', "
+                         f"'interpret', or 'jnp'")
+    _DEFAULT_BACKEND = name
+
+
+def default_interpret() -> bool:
+    """Platform default for ``interpret``: compiled on TPU, interpreter
+    elsewhere — a direct caller never silently runs the Python
+    interpreter on real hardware. ``$REPRO_KERNEL_BACKEND`` overrides."""
+    env = _env_backend()
+    if env is not None:
+        return env != "pallas"
+    return jax.devices()[0].platform != "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """The one sanctioned ``interpret=None`` resolution for kernel
+    wrappers (the ``literal-interpret-default`` lint rule enforces that
+    kernels route through here / ``default_interpret`` rather than
+    defaulting to a literal)."""
+    if interpret is None:
+        return default_interpret()
+    return bool(interpret)

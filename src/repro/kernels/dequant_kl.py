@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.pairwise_kl import default_interpret
+from repro.kernels.backend import resolve_interpret
 
 DEFAULT_BN = 16
 DEFAULT_BM = 16
@@ -127,8 +127,7 @@ def int8_pairwise_kl(q: jnp.ndarray, scale: jnp.ndarray, zp: jnp.ndarray,
     ``interpret`` defaults from the platform (compiled on TPU,
     interpreter elsewhere)."""
     del zp
-    if interpret is None:
-        interpret = default_interpret()
+    interpret = resolve_interpret(interpret)
     if q.ndim != 3 or scale.shape != q.shape[:2]:
         raise ValueError(f"shapes disagree: q {q.shape}, scale "
                          f"{scale.shape}")

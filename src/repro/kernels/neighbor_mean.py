@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.pairwise_kl import default_interpret
+from repro.kernels.backend import resolve_interpret
 
 DEFAULT_BN = 128
 DEFAULT_BJ = 128
@@ -43,8 +43,7 @@ def neighbor_mean(w: jnp.ndarray, probs: jnp.ndarray, bn: int = DEFAULT_BN,
 
     ``interpret`` defaults from the platform (compiled on TPU, interpreter
     elsewhere)."""
-    if interpret is None:       # static arg: resolved at trace time
-        interpret = default_interpret()
+    interpret = resolve_interpret(interpret)  # static: trace-time resolve
     n, r, c = probs.shape
     s = probs.reshape(n, r * c)
     rc = r * c

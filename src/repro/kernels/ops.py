@@ -21,25 +21,12 @@ from repro.kernels import neighbor_mean as _nm
 from repro.kernels import pairwise_kl as _pk
 from repro.kernels import ref as _ref
 from repro.kernels import soft_ce as _sc
-
-_DEFAULT_BACKEND: Optional[str] = None
-
-
-def default_backend() -> str:
-    global _DEFAULT_BACKEND
-    if _DEFAULT_BACKEND is None:
-        platform = jax.devices()[0].platform
-        _DEFAULT_BACKEND = "pallas" if platform == "tpu" else "jnp"
-    return _DEFAULT_BACKEND
-
-
-def set_default_backend(name: str) -> None:
-    global _DEFAULT_BACKEND
-    if name not in ("pallas", "interpret", "jnp"):
-        # ValueError (not assert) so the guard survives python -O
-        raise ValueError(f"unknown backend {name!r}; expected 'pallas', "
-                         f"'interpret', or 'jnp'")
-    _DEFAULT_BACKEND = name
+from repro.kernels.backend import (  # noqa: F401  (public re-exports)
+    default_backend,
+    default_interpret,
+    resolve_interpret,
+    set_default_backend,
+)
 
 
 # Above this many rows the square divergence rebuild streams row-block

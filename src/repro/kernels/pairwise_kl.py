@@ -25,16 +25,13 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+# re-exported for back-compat: default_interpret lived here before the
+# shared backend module existed
+from repro.kernels.backend import default_interpret, resolve_interpret
+
 DEFAULT_BN = 128
 DEFAULT_BM = 128
 DEFAULT_BK = 512
-
-
-def default_interpret() -> bool:
-    """Platform default for ``interpret``: compiled on TPU, interpreter
-    elsewhere — a direct caller never silently runs the Python
-    interpreter on real hardware."""
-    return jax.devices()[0].platform != "tpu"
 
 
 def _kernel(p_ref, ln_ref, lm_ref, out_ref, *, n_k: int, inv_r: float):
@@ -105,8 +102,7 @@ def pairwise_kl_pair(logp_a: jnp.ndarray, logp_b: jnp.ndarray,
 
     logp_a (U,R,C), logp_b (M,R,C) -> (U,M) fp32. The square matrix is the
     A == B special case (``pairwise_kl``)."""
-    if interpret is None:
-        interpret = default_interpret()
+    interpret = resolve_interpret(interpret)
     u, r, c = logp_a.shape
     if logp_b.shape[1:] != (r, c):
         raise ValueError(f"messenger shapes disagree: {logp_a.shape} vs "

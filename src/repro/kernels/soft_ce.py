@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.pairwise_kl import default_interpret
+from repro.kernels.backend import resolve_interpret
 
 DEFAULT_BN = 8
 DEFAULT_BR = 256
@@ -51,8 +51,7 @@ def soft_ce(logits: jnp.ndarray, labels: jnp.ndarray, bn: int = DEFAULT_BN,
 
     ``interpret`` defaults from the platform (compiled on TPU, interpreter
     elsewhere)."""
-    if interpret is None:       # static arg: resolved at trace time
-        interpret = default_interpret()
+    interpret = resolve_interpret(interpret)  # static: trace-time resolve
     n, r, c = logits.shape
     bn = min(bn, n)
     br = min(br, r)

@@ -49,7 +49,9 @@ def serve(arch: str, reduced: bool = True, batch: int = 4,
         out_tokens.append(tok)
     t_decode = time.time() - t0
     seqs = jnp.concatenate(out_tokens, axis=1)
-    assert not bool(jnp.isnan(logits).any()), "NaN logits during decode"
+    if bool(jnp.isnan(logits).any()):
+        # RuntimeError (not assert): the NaN check must survive python -O
+        raise RuntimeError("NaN logits during decode")
     if verbose:
         print(f"  prefill {prompt_len} toks x{batch}: {t_prefill:.2f}s; "
               f"decode {decode_len} toks: {t_decode:.2f}s "

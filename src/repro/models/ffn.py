@@ -164,7 +164,9 @@ def moe_dropless_forward(p: Params, cfg: ModelConfig, x: jnp.ndarray):
 def moe_decode(p: Params, cfg: ModelConfig, x: jnp.ndarray):
     """x (B,1,D): gather the k selected experts' weights per row."""
     b, s, d = x.shape
-    assert s == 1
+    if s != 1:
+        # ValueError (not assert): trace-time guard survives python -O
+        raise ValueError(f"moe_decode expects one token per row, got S={s}")
     weights, idx, aux = route(p, cfg, x)                     # (B,1,k)
     idxf = idx[:, 0, :]                                      # (B,k)
     wg = p["w_gate"][idxf]                                   # (B,k,D,F)

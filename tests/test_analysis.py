@@ -1,0 +1,435 @@
+"""Mutation tests for the static-analysis subsystem.
+
+Each detector is driven twice: on a seeded-bug variant (the mutation)
+where it MUST fire, and on the clean/real code where it MUST stay
+silent. A rule that never fires is worse than no rule — it certifies
+bugs as passing.
+"""
+import ast
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import fixtures, hlo_rules, jaxpr_rules, jaxprlib, \
+    lint_rules, pallas_rules
+from repro.analysis.registry import (AnalysisContext, Violation,
+                                     get_rule, load_baseline, register_rule,
+                                     registered_rules, rules_for, run_rules,
+                                     unregister_rule, write_baseline)
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    return AnalysisContext()
+
+
+# --------------------------------------------------------------------------
+# rule 1: prng-key-reuse
+# --------------------------------------------------------------------------
+
+def test_key_reuse_fires_on_double_draw():
+    def bad(key):
+        a = jax.random.normal(key, (3,))
+        b = jax.random.uniform(key, (3,))
+        return a + b
+
+    closed = jax.make_jaxpr(bad)(jax.random.key(0))
+    v = jaxpr_rules.audit_key_reuse("bad", closed)
+    assert len(v) == 1
+    assert v[0].rule == "prng-key-reuse"
+
+
+def test_key_reuse_fires_on_draw_plus_split():
+    def bad(key):
+        a = jax.random.normal(key, (3,))
+        k1, _ = jax.random.split(key)      # reused after drawing
+        return a + jax.random.uniform(k1, (3,))
+
+    closed = jax.make_jaxpr(bad)(jax.random.key(0))
+    assert jaxpr_rules.audit_key_reuse("bad", closed)
+
+
+def test_key_reuse_sees_through_nested_jit():
+    @jax.jit
+    def draw(key):
+        return jax.random.normal(key, (3,))
+
+    def bad(key):
+        return draw(key) + jax.random.uniform(key, (3,))
+
+    closed = jax.make_jaxpr(bad)(jax.random.key(0))
+    assert jaxpr_rules.audit_key_reuse("bad", closed)
+
+
+def test_key_reuse_silent_on_split_discipline():
+    def good(key):
+        k1, k2 = jax.random.split(key)
+        return jax.random.normal(k1, (3,)) + jax.random.uniform(k2, (3,))
+
+    closed = jax.make_jaxpr(good)(jax.random.key(0))
+    assert jaxpr_rules.audit_key_reuse("good", closed) == []
+
+
+def test_key_reuse_silent_on_real_pipelines(ctx):
+    # randint-style internal splits must not read as reuse
+    for name in ("cohort_batch", "cohort_batch_padded"):
+        entry = fixtures.build_entries(ctx)[name]
+        assert jaxpr_rules.audit_key_reuse(name, entry.jaxpr) == []
+
+
+# --------------------------------------------------------------------------
+# rule 2: padded-shape-key-draw
+# --------------------------------------------------------------------------
+
+def test_padded_draw_fires_on_draw_at_padded_dim():
+    def mutant(key):
+        # draws at the PADDED row count — the PR 5 bug
+        return jax.random.randint(key, (fixtures.N_ROWS, 3), 0, 5)
+
+    closed = jax.make_jaxpr(mutant)(jax.random.key(0))
+    v = jaxpr_rules.audit_padded_draws(
+        "mutant", closed, (fixtures.N_ROWS, fixtures.N_REAL))
+    assert v and v[0].rule == "padded-shape-key-draw"
+
+
+def test_padded_draw_silent_on_real_padded_pipeline(ctx):
+    entry = fixtures.build_entries(ctx)["cohort_batch_padded"]
+    assert entry.padded == (fixtures.N_ROWS, fixtures.N_REAL)
+    assert jaxpr_rules.audit_padded_draws(
+        "cohort_batch_padded", entry.jaxpr, entry.padded) == []
+
+
+# --------------------------------------------------------------------------
+# rule 3: unmasked-optimizer-leaf
+# --------------------------------------------------------------------------
+
+def _mask_probe_args():
+    params = {"w": jnp.ones((3, 3)), "b": jnp.zeros((3,))}
+    opt_state = {"m": jnp.zeros((3, 3)), "v": jnp.zeros((3, 3))}
+    gate = jnp.ones((), bool)
+    return params, opt_state, gate
+
+
+def test_masked_update_fires_on_ungated_opt_state():
+    def mutant(params, opt_state, gate):
+        new_p = jax.tree.map(lambda p: p - 0.1, params)
+        gated_p = jax.tree.map(lambda n, o: jnp.where(gate, n, o),
+                               new_p, params)
+        new_s = jax.tree.map(lambda s: s + 1.0, opt_state)  # never gated
+        return gated_p, new_s
+
+    args = _mask_probe_args()
+    counts = [len(jax.tree.leaves(a)) for a in args]
+    v = jaxpr_rules.audit_masked_update(
+        mutant, args, counts, gate_arg=2, checked_args=(0, 1),
+        where="mutant", arg_names=("params", "opt_state", "gate"))
+    # exactly the two opt_state leaves escape the freeze
+    assert len(v) == 2
+    assert all("opt_state" in x.where for x in v)
+    assert all(x.rule == "unmasked-optimizer-leaf" for x in v)
+
+
+def test_masked_update_silent_when_every_leaf_gated():
+    def good(params, opt_state, gate):
+        new_p = jax.tree.map(lambda p: p - 0.1, params)
+        new_s = jax.tree.map(lambda s: s + 1.0, opt_state)
+        gated_p = jax.tree.map(lambda n, o: jnp.where(gate, n, o),
+                               new_p, params)
+        gated_s = jax.tree.map(lambda n, o: jnp.where(gate, n, o),
+                               new_s, opt_state)
+        return gated_p, gated_s
+
+    args = _mask_probe_args()
+    counts = [len(jax.tree.leaves(a)) for a in args]
+    assert jaxpr_rules.audit_masked_update(
+        good, args, counts, gate_arg=2, checked_args=(0, 1),
+        where="good") == []
+
+
+def test_masked_update_silent_on_real_cohort_step():
+    wrapper, args, counts = fixtures.cohort_step_probe()
+    assert jaxpr_rules.audit_masked_update(
+        wrapper, args, counts, gate_arg=6, checked_args=(0, 1),
+        where="cohort_step") == []
+
+
+def test_masked_update_rejects_stale_leaf_counts():
+    wrapper, args, counts = fixtures.cohort_step_probe()
+    with pytest.raises(ValueError, match="leaf_counts"):
+        jaxpr_rules.audit_masked_update(
+            wrapper, args, counts[:-1] + [counts[-1] + 1], gate_arg=6,
+            checked_args=(0,), where="x")
+
+
+# --------------------------------------------------------------------------
+# rule 4: fp32-downcast-outside-codec
+# --------------------------------------------------------------------------
+
+def test_downcast_fires_on_bf16_cast():
+    closed = jax.make_jaxpr(
+        lambda x: x.astype(jnp.bfloat16) + 1)(jnp.ones((4,), jnp.float32))
+    v = jaxpr_rules.audit_downcasts("mutant", closed)
+    assert v and "float32 -> bfloat16" in v[0].message
+
+
+def test_downcast_fires_on_int8_quantization():
+    closed = jax.make_jaxpr(
+        lambda x: (x * 127).astype(jnp.int8))(jnp.ones((4,), jnp.float32))
+    assert jaxpr_rules.audit_downcasts("mutant", closed)
+
+
+def test_downcast_silent_on_clean_fp32_and_real_step(ctx):
+    closed = jax.make_jaxpr(lambda x: x * 2.0)(jnp.ones((4,), jnp.float32))
+    assert jaxpr_rules.audit_downcasts("clean", closed) == []
+    entry = fixtures.build_entries(ctx)["cohort_step"]
+    assert jaxpr_rules.audit_downcasts("cohort_step", entry.jaxpr) == []
+
+
+def test_downcast_codec_boundary_is_exempt(ctx):
+    # the int8 codec DOES quantize — and is excluded from the rule's scan
+    entry = fixtures.build_entries(ctx)["wire[int8].roundtrip"]
+    assert entry.codec_boundary
+    assert jaxprlib.find_downcasts(entry.jaxpr)    # quantization happens...
+    names = {e.name for e in fixtures.build_entries(ctx).values()
+             if not e.codec_boundary}
+    assert "wire[int8].roundtrip" not in names     # ...but is sanctioned
+
+
+# --------------------------------------------------------------------------
+# rule 5: client-axis-collectives (HLO)
+# --------------------------------------------------------------------------
+
+def test_collective_violation_fires_on_injected_all_gather():
+    text = ("  %ag = f32[32,4]{1,0} all-gather(f32[8,4]{1,0} %p), "
+            "dimensions={0}\n")
+    v = hlo_rules.collective_violations("mutant", text)
+    assert len(v) == 1
+    assert v[0].rule == "client-axis-collectives"
+    assert "all-gather" in v[0].where
+
+
+def test_collective_violation_silent_on_clean_hlo():
+    text = "  %dot = f32[8,8]{1,0} dot(f32[8,4]{1,0} %a, f32[4,8]{1,0} %b)\n"
+    assert hlo_rules.collective_violations("clean", text) == []
+
+
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs XLA_FLAGS=--xla_force_host_platform_"
+                           "device_count=8")
+def test_sharded_step_lowers_with_zero_collectives():
+    from repro.sharding import make_client_mesh
+    mesh = make_client_mesh(8)
+    assert hlo_rules.collective_violations(
+        "sharded_cohort_step", hlo_rules._sharded_step_text(mesh)) == []
+    assert hlo_rules.collective_violations(
+        "divergence_matrix[mesh]",
+        hlo_rules._sharded_divergence_text(mesh)) == []
+
+
+# --------------------------------------------------------------------------
+# rule 6: jit-cache-bucketing (HLO)
+# --------------------------------------------------------------------------
+
+def test_recompile_violation_fires_on_unbucketed_replay():
+    f = jax.jit(lambda x: x.sum())
+
+    def replay():
+        for u in (1, 2, 3, 5, 6, 7):       # 6 distinct shapes
+            f(jnp.zeros((u,)))
+
+    v = hlo_rules.recompile_violations("unbucketed", f, replay,
+                                       max_new_compiles=4)
+    assert v and v[0].rule == "jit-cache-bucketing"
+    assert "6 fresh compiles" in v[0].message
+
+
+def test_recompile_silent_on_bucketed_replay():
+    f = jax.jit(lambda x: x.sum())
+
+    def replay():
+        for u in (1, 2, 3, 5, 6, 7):
+            n = 1 << (u - 1).bit_length()  # power-of-two bucket
+            f(jnp.zeros((n,)))
+
+    assert hlo_rules.recompile_violations("bucketed", f, replay,
+                                          max_new_compiles=4) == []
+
+
+# --------------------------------------------------------------------------
+# rule 7: pallas-grid-divisibility
+# --------------------------------------------------------------------------
+
+def test_pallas_check_fires_on_nondividing_block():
+    rec = pallas_rules.PallasCallRecord(
+        kernel="mutant_kernel", grid=(2, 2),
+        in_blocks=[(128, 512)], out_blocks=[(128, 128)],
+        in_shapes=[(200, 512)],            # 200 % 128 != 0
+        out_shapes=[(256, 256)])
+    v = pallas_rules.check_record(rec)
+    assert len(v) == 1
+    assert "dim 0 of size 200" in v[0].message
+
+
+def test_pallas_check_silent_on_tiling_block():
+    rec = pallas_rules.PallasCallRecord(
+        kernel="good_kernel", grid=(2,),
+        in_blocks=[(128, 512), None], out_blocks=[(128, 128)],
+        in_shapes=[(256, 512), (99,)],     # None block: exempt
+        out_shapes=[(256, 256)])
+    assert pallas_rules.check_record(rec) == []
+
+
+def test_pallas_check_fires_on_rank_mismatch():
+    rec = pallas_rules.PallasCallRecord(
+        kernel="m", grid=(1,), in_blocks=[(8, 8)], out_blocks=[],
+        in_shapes=[(8, 8, 8)], out_shapes=[])
+    v = pallas_rules.check_record(rec)
+    assert v and "rank" in v[0].message
+
+
+def test_kernel_probes_record_and_pass():
+    records = pallas_rules.run_kernel_probes()
+    assert records                          # interception captured calls
+    for rec in records:
+        assert pallas_rules.check_record(rec) == [], rec
+
+
+# --------------------------------------------------------------------------
+# lint rules
+# --------------------------------------------------------------------------
+
+def test_bare_assert_fires_and_kernel_exemption():
+    src = ("def f(x):\n"
+           "    assert x > 0\n"
+           "    return x\n"
+           "def _kernel_body(ref):\n"
+           "    assert ref.ndim == 2\n")
+    v = lint_rules.find_bare_asserts(ast.parse(src), "m.py")
+    assert len(v) == 1
+    assert v[0].where == "m.py:2"
+
+
+def test_literal_interpret_default_fires():
+    src = ("def pairwise(x, interpret=True):\n"
+           "    return x\n")
+    v = lint_rules.find_literal_interpret(ast.parse(src), "m.py")
+    assert v and "hardcoded interpret default" in v[0].message
+
+
+def test_literal_interpret_assignment_fires_none_default_clean():
+    src = ("def pairwise(x, interpret=None):\n"
+           "    interpret = False\n"
+           "    return x\n")
+    v = lint_rules.find_literal_interpret(ast.parse(src), "m.py")
+    assert len(v) == 1 and v[0].where == "m.py:2"
+    clean = ("def pairwise(x, interpret=None):\n"
+             "    from repro.kernels.backend import resolve_interpret\n"
+             "    interpret = resolve_interpret(interpret)\n"
+             "    return x\n")
+    assert lint_rules.find_literal_interpret(ast.parse(clean), "m.py") == []
+
+
+def test_unregistered_registry_name_fires_and_known_names_clean():
+    regs = lint_rules._live_registries()
+    src = ('a = get_policy("no-such-policy")\n'
+           'b = as_codec("int8")\n'
+           'c = as_codec("topk:4")\n'
+           'd = get_policy("sqmd")\n')
+    v = lint_rules.find_unregistered_names(ast.parse(src), "m.py", regs)
+    assert len(v) == 1
+    assert "no-such-policy" in v[0].message and v[0].where == "m.py:1"
+
+
+def test_lint_family_clean_on_repo(ctx):
+    results = run_rules(ctx, families=["lint"])
+    assert results and all(r.status == "ok" for r in results), \
+        [(r.rule, [v.as_dict() for v in r.violations]) for r in results]
+
+
+# --------------------------------------------------------------------------
+# registry + runner + baseline
+# --------------------------------------------------------------------------
+
+def test_registry_rejects_duplicates_and_unknowns():
+    @register_rule("tmp-test-rule", family="lint")
+    def tmp_rule(ctx):
+        return []
+
+    try:
+        with pytest.raises(ValueError, match="already registered"):
+            register_rule("tmp-test-rule", family="lint")(lambda c: [])
+    finally:
+        unregister_rule("tmp-test-rule")
+    with pytest.raises(ValueError, match="unknown rule family"):
+        register_rule("tmp-test-rule2", family="nope")(lambda c: [])
+    with pytest.raises(KeyError, match="unknown rule"):
+        get_rule("never-registered")
+    with pytest.raises(ValueError, match="unknown rule family"):
+        rules_for(families=["nope"])
+
+
+def test_all_builtin_rules_registered():
+    names = set(registered_rules())
+    assert {"prng-key-reuse", "padded-shape-key-draw",
+            "unmasked-optimizer-leaf", "fp32-downcast-outside-codec",
+            "client-axis-collectives", "jit-cache-bucketing",
+            "pallas-grid-divisibility", "bare-assert",
+            "literal-interpret-default",
+            "unregistered-registry-name"} <= names
+
+
+def test_runner_skips_below_device_floor():
+    @register_rule("tmp-needs-devices", family="hlo",
+                   requires_devices=10_000)
+    def needy(ctx):                        # pragma: no cover - skipped
+        raise AssertionError("must not run")
+
+    try:
+        (r,) = run_rules(names=["tmp-needs-devices"])
+        assert r.status == "skipped" and not r.failed
+        assert "xla_force_host_platform_device_count" in r.detail
+    finally:
+        unregister_rule("tmp-needs-devices")
+
+
+def test_runner_turns_crash_into_error_result():
+    @register_rule("tmp-crashes", family="lint")
+    def crashes(ctx):
+        raise RuntimeError("auditor exploded")
+
+    try:
+        (r,) = run_rules(names=["tmp-crashes"])
+        assert r.status == "error" and r.failed
+        assert "auditor exploded" in r.detail
+    finally:
+        unregister_rule("tmp-crashes")
+
+
+def test_baseline_roundtrip_suppresses(tmp_path):
+    @register_rule("tmp-finding", family="lint")
+    def finding(ctx):
+        yield Violation("tmp-finding", "somewhere", "a known issue")
+
+    try:
+        (r,) = run_rules(names=["tmp-finding"])
+        assert r.status == "violation" and r.failed
+
+        path = tmp_path / "baseline.json"
+        assert write_baseline(path, [r]) == 1
+        baseline = load_baseline(path)
+        assert baseline == {"tmp-finding::somewhere"}
+
+        (r2,) = run_rules(names=["tmp-finding"], baseline=baseline)
+        assert r2.status == "ok" and r2.suppressed == 1
+    finally:
+        unregister_rule("tmp-finding")
+
+
+def test_baseline_load_rejects_garbage(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        load_baseline(tmp_path / "missing.json")
+    bad = tmp_path / "bad.json"
+    bad.write_text('{"suppressed": 3}')
+    with pytest.raises(ValueError, match="JSON list"):
+        load_baseline(bad)

@@ -1,0 +1,90 @@
+"""Pinned-fixture tests for launch/hlo_analysis.collective_bytes.
+
+The HLO auditors (analysis/hlo_rules.py) stand on this parser — if the
+regexes rot against real compiler output, the zero-collective gate turns
+into a silent no-op. These fixtures pin the line shapes the parser must
+keep handling: layout suffixes, tuple-shaped async starts, ``-done`` ops
+(counted zero times), scalars, and every supported dtype token.
+"""
+import pytest
+
+from repro.launch.hlo_analysis import _SHAPE_RE, collective_bytes
+
+
+def test_shape_re_basic_and_layout_suffix():
+    assert _SHAPE_RE.findall("f32[8,4]{1,0}") == [("f32", "8,4")]
+    assert _SHAPE_RE.findall("bf16[16]") == [("bf16", "16")]
+    assert _SHAPE_RE.findall("pred[2,2]") == [("pred", "2,2")]
+
+
+def test_shape_re_scalar_and_tuple():
+    assert _SHAPE_RE.findall("f32[]") == [("f32", "")]
+    assert _SHAPE_RE.findall("(f32[8,4]{1,0}, f32[32,4]{1,0})") == [
+        ("f32", "8,4"), ("f32", "32,4")]
+
+
+def test_all_reduce_ring_factor():
+    text = ("  %ar = f32[8,4]{1,0} all-reduce(f32[8,4]{1,0} %p), "
+            "replica_groups={}, to_apply=%add\n")
+    stats = collective_bytes(text)
+    assert stats["_counts"]["all-reduce"] == 1
+    assert stats["_raw"]["all-reduce"] == 8 * 4 * 4
+    # ring all-reduce moves ~2x the buffer
+    assert stats["all-reduce"] == pytest.approx(2.0 * 8 * 4 * 4)
+    assert stats["_total_weighted"] == pytest.approx(2.0 * 8 * 4 * 4)
+
+
+def test_all_gather_start_tuple_shape_done_not_counted():
+    text = (
+        "  %ags = (f32[8,4]{1,0}, f32[32,4]{1,0}) "
+        "all-gather-start(f32[8,4]{1,0} %p), dimensions={0}\n"
+        "  %agd = f32[32,4]{1,0} all-gather-done((f32[8,4]{1,0}, "
+        "f32[32,4]{1,0}) %ags)\n")
+    stats = collective_bytes(text)
+    # one op: the -start; the -done is the same transfer completing
+    assert stats["_counts"]["all-gather"] == 1
+    # both tuple operands counted: (8*4 + 32*4) * 4 bytes
+    assert stats["_raw"]["all-gather"] == (8 * 4 + 32 * 4) * 4
+    assert stats["all-gather"] == pytest.approx((8 * 4 + 32 * 4) * 4)
+
+
+def test_reduce_scatter_and_collective_permute():
+    text = (
+        "  %rs = bf16[4,4]{1,0} reduce-scatter(bf16[16,4]{1,0} %p), "
+        "dimensions={0}, to_apply=%add\n"
+        "  %cp = u8[128]{0} collective-permute(u8[128]{0} %q), "
+        "source_target_pairs={{0,1},{1,0}}\n")
+    stats = collective_bytes(text)
+    assert stats["_counts"]["reduce-scatter"] == 1
+    assert stats["_raw"]["reduce-scatter"] == 4 * 4 * 2      # bf16 = 2B
+    assert stats["_counts"]["collective-permute"] == 1
+    assert stats["_raw"]["collective-permute"] == 128        # u8 = 1B
+    assert stats["_total_weighted"] == pytest.approx(4 * 4 * 2 + 128)
+
+
+def test_scalar_result_all_reduce():
+    text = "  %ar = f32[] all-reduce(f32[] %x), to_apply=%add\n"
+    stats = collective_bytes(text)
+    assert stats["_counts"]["all-reduce"] == 1
+    assert stats["_raw"]["all-reduce"] == 4
+
+
+def test_collective_free_text_is_all_zero():
+    text = ("  %dot = f32[64,64]{1,0} dot(f32[64,8]{1,0} %a, "
+            "f32[8,64]{1,0} %b), lhs_contracting_dims={1}\n"
+            "  %add = f32[64,64]{1,0} add(%dot, %dot)\n")
+    stats = collective_bytes(text)
+    assert stats["_total_weighted"] == 0.0
+    assert all(c == 0 for c in stats["_counts"].values())
+
+
+def test_multiple_ops_accumulate_per_kind():
+    text = (
+        "  %a = f32[16]{0} all-reduce(f32[16]{0} %x), to_apply=%add\n"
+        "  %b = f32[16]{0} all-reduce(f32[16]{0} %y), to_apply=%add\n"
+        "  %c = s32[8]{0} all-to-all(s32[8]{0} %z), dimensions={0}\n")
+    stats = collective_bytes(text)
+    assert stats["_counts"]["all-reduce"] == 2
+    assert stats["_raw"]["all-reduce"] == 2 * 16 * 4
+    assert stats["_counts"]["all-to-all"] == 1
+    assert stats["_raw"]["all-to-all"] == 8 * 4

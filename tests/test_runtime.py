@@ -595,12 +595,31 @@ def test_precision_recall_constant_predictor():
 
 
 def test_set_default_backend_rejects_unknown():
+    from repro.kernels import backend as kb
     from repro.kernels import ops
-    before = ops._DEFAULT_BACKEND
+    before = kb._DEFAULT_BACKEND
     try:
         with pytest.raises(ValueError, match="unknown backend"):
             ops.set_default_backend("cuda")
         ops.set_default_backend("jnp")
         assert ops.default_backend() == "jnp"
     finally:
-        ops._DEFAULT_BACKEND = before
+        kb._DEFAULT_BACKEND = before
+
+
+def test_kernel_backend_env_override(monkeypatch):
+    from repro.kernels import backend as kb
+    monkeypatch.setattr(kb, "_DEFAULT_BACKEND", None)
+    monkeypatch.setenv(kb.ENV_VAR, "interpret")
+    assert kb.default_backend() == "interpret"
+    assert kb.default_interpret() is True
+    assert kb.resolve_interpret(None) is True
+    assert kb.resolve_interpret(False) is False
+    monkeypatch.setattr(kb, "_DEFAULT_BACKEND", None)
+    monkeypatch.setenv(kb.ENV_VAR, "pallas")
+    assert kb.default_backend() == "pallas"
+    assert kb.default_interpret() is False
+    monkeypatch.setattr(kb, "_DEFAULT_BACKEND", None)
+    monkeypatch.setenv(kb.ENV_VAR, "cuda")
+    with pytest.raises(ValueError, match="not a valid backend"):
+        kb.default_backend()
