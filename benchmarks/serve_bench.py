@@ -1,0 +1,114 @@
+"""Serving-under-traffic benchmark: latency/throughput across batch
+policies and arrival intensities, with training live on the same clock.
+
+Every cell of the (intensity x batch policy) grid runs a FRESH
+train-and-serve session: an ``AsyncFederationEngine`` federating on the
+virtual clock while a ``QueryRuntime`` pushes query traffic through the
+shared event loop — so the reported latencies include answers served
+from snapshots mid-training, exactly the regime the paper's on-device
+personalization targets.
+
+Per-cell metrics (one JSON row each, ``BENCH_serve.json`` at the repo
+root by default): p50/p99/mean latency (virtual queue wait + wall
+compute of the jitted serve step), compute throughput, virtual-rate
+throughput, mean/max queue depth, snapshot staleness of the answers,
+and the training side's final accuracy and server-round count.
+
+  PYTHONPATH=src python benchmarks/serve_bench.py            # full grid
+  PYTHONPATH=src python benchmarks/serve_bench.py --smoke    # CI lane
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+OUT = "BENCH_serve.json"
+
+
+def _workloads(smoke: bool):
+    """(intensity label, workload) — ordered low to high pressure."""
+    from repro.serve import DiurnalQueries, PoissonQueries
+    if smoke:
+        return [("low", PoissonQueries(rate=0.3, seed=11)),
+                ("high", PoissonQueries(rate=1.0, seed=11))]
+    return [("low", PoissonQueries(rate=0.3, seed=11)),
+            ("high", PoissonQueries(rate=1.0, seed=11)),
+            ("burst", DiurnalQueries(base_rate=0.5, amp=0.8, period=8.0,
+                                     burst_frac=0.5, seed=11))]
+
+
+def _policies(smoke: bool):
+    from repro.serve import Immediate, MicroBatch
+    del smoke  # same pair either way — the policy axis IS the comparison
+    return [("immediate", Immediate(max_batch=64)),
+            ("micro", MicroBatch(max_batch=16, max_wait=0.25))]
+
+
+def run_cell(intensity: str, workload, policy_name: str, policy,
+             until: float, samples: int, seed: int) -> dict:
+    """One fresh train-and-serve run; returns the benchmark row."""
+    from repro.core import AsyncFederationEngine, FederationConfig, sqmd
+    from repro.data import make_splits, pad_like
+    from repro.models.mlp import hetero_mlp_zoo
+    from repro.serve import QueryRuntime, split_query_stream
+
+    ds = pad_like(samples_per_client=samples, ref_size=samples)
+    splits = make_splits(ds, seed=seed)
+    zoo = hetero_mlp_zoo(ds.feature_len, ds.n_classes)
+    assignment = [list(zoo)[i % 3] for i in range(ds.n_clients)]
+    config = FederationConfig(rounds=int(until), batch_size=8,
+                              eval_every=max(2, int(until) // 2))
+    engine = AsyncFederationEngine.build(
+        ds, splits, zoo, assignment, sqmd(q=8, k=4),
+        arrivals="cadence", trigger="every-k",
+        config=config, seed=seed + 1)
+    runtime = QueryRuntime(engine, workload=workload, policy=policy,
+                           features=split_query_stream(splits))
+    t0 = time.time()
+    hist = runtime.run(splits, until=until)
+    wall = time.time() - t0
+    row = {"intensity": intensity, "batch_policy": policy_name,
+           "until": until, "clients": ds.n_clients}
+    row.update(runtime.summary(horizon=until))
+    row["final_acc"] = float(hist.mean_acc[-1])
+    row["server_rounds"] = int(hist.server_rounds[-1])
+    row["wall_s"] = round(wall, 2)
+    return row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--until", type=float,
+                    help="virtual horizon per cell (default 16; smoke 6)")
+    ap.add_argument("--samples-per-client", type=int, default=24)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="2x2 grid at a short horizon for CI")
+    ap.add_argument("--out", default=OUT)
+    args = ap.parse_args()
+    until = args.until if args.until else (6.0 if args.smoke else 16.0)
+
+    rows = []
+    for intensity, workload in _workloads(args.smoke):
+        for pname, policy in _policies(args.smoke):
+            print(f"== {intensity} x {pname} (until={until}) ==",
+                  flush=True)
+            row = run_cell(intensity, workload, pname, policy, until,
+                           args.samples_per_client, args.seed)
+            print(f"   served {row['n_served']:5d}  "
+                  f"p50 {row['latency_p50_s']*1e3:7.1f}ms  "
+                  f"p99 {row['latency_p99_s']*1e3:7.1f}ms  "
+                  f"depth_max {row['queue_depth_max']:3d}  "
+                  f"stale_mean {row['staleness_mean']:.3f}", flush=True)
+            rows.append(row)
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=2)
+    grid = (len({r['intensity'] for r in rows}),
+            len({r['batch_policy'] for r in rows}))
+    print(f"serve_bench,{len(rows)} rows,grid={grid[0]}x{grid[1]} "
+          f"-> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

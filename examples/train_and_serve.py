@@ -1,0 +1,62 @@
+"""Train-and-serve: personalized queries answered while the federation
+is still learning.
+
+An ``AsyncFederationEngine`` runs the paper's asynchronous messenger
+distillation on a virtual clock; a ``QueryRuntime`` rides the SAME event
+loop, so query traffic interleaves with client wakes, messenger uploads,
+and server policy fires. Every answer comes from the latest published
+``SnapshotStore`` version of that client's own personalized params and
+reports how stale those params were at serve time.
+
+The demo contrasts two admission policies under one bursty diurnal
+workload (identical arrivals, apples-to-apples):
+
+  immediate  flush at every arrival instant — lowest wait, tiny batches
+  micro      max-batch/max-wait micro-batching — batches amortize the
+             jitted gather-forward, the tail rides the max-wait bound
+
+    PYTHONPATH=src python examples/train_and_serve.py
+"""
+from repro.core import AsyncFederationEngine, FederationConfig, sqmd
+from repro.data import make_splits, sc_like
+from repro.models.mlp import hetero_mlp_zoo
+from repro.serve import (DiurnalQueries, Immediate, MicroBatch,
+                         QueryRuntime, split_query_stream)
+
+
+def main():
+    until = 24.0
+    ds = sc_like(samples_per_client=40, ref_size=60)
+    splits = make_splits(ds, seed=0, label_noise=0.3)
+    zoo = hetero_mlp_zoo(ds.feature_len, ds.n_classes)
+    assignment = [list(zoo)[i % 3] for i in range(ds.n_clients)]
+    config = FederationConfig(rounds=int(until), batch_size=16,
+                              eval_every=6)
+    workload = DiurnalQueries(base_rate=0.4, amp=0.8, period=8.0,
+                              burst_frac=0.5, seed=3)
+
+    print(f"clients={ds.n_clients}  horizon={until}  workload={workload!r}")
+    print(f"{'policy':<42}{'served':>7}{'p50 ms':>9}{'p99 ms':>9}"
+          f"{'depth':>6}{'stale':>7}{'acc':>7}")
+    for policy in (Immediate(max_batch=64),
+                   MicroBatch(max_batch=16, max_wait=0.25)):
+        engine = AsyncFederationEngine.build(
+            ds, splits, zoo, assignment, sqmd(q=16, k=8, rho=0.8),
+            arrivals="cadence", trigger="every-k", config=config, seed=1)
+        runtime = QueryRuntime(engine, workload=workload, policy=policy,
+                               features=split_query_stream(splits))
+        hist = runtime.run(splits, until=until)
+        s = runtime.summary(horizon=until)
+        print(f"{s['policy']:<42}{s['n_served']:>7}"
+              f"{s['latency_p50_s']*1e3:>9.1f}"
+              f"{s['latency_p99_s']*1e3:>9.1f}"
+              f"{s['queue_depth_max']:>6}"
+              f"{s['staleness_mean']:>7.2f}"
+              f"{hist.mean_acc[-1]:>7.3f}")
+    print("\nsame traffic, same training run shape: immediate buys p50 "
+          "at the cost of per-request compute;\nmicro batches the bursts "
+          "and bounds the tail at max_wait + compute.")
+
+
+if __name__ == "__main__":
+    main()

@@ -144,3 +144,38 @@ def jit_cache_bucketing(ctx: AnalysisContext) -> Iterable[Violation]:
     yield from recompile_violations(
         "update_divergence_cache[jnp]", similarity._delta_update, replay,
         max_new_compiles=_REPLAY_BUCKETS)
+
+
+@register_rule("serve-jit-bucketing", family="hlo")
+def serve_jit_bucketing(ctx: AnalysisContext) -> Iterable[Violation]:
+    """Replay every batch size 1..9 through the personalized serve step;
+    the jit cache must grow per power-of-two bucket {1, 2, 4, 8, 16},
+    not per distinct batch size."""
+    from repro.models.mlp import MLPConfig, mlp_family
+    from repro.serve import QueryEngine, SnapshotStore, serve_step
+
+    n = 6
+    init_fn, apply_fn = mlp_family(MLPConfig("probe-serve", 4, (8,), 3))
+    params = jax.vmap(init_fn)(jax.random.split(jax.random.key(23), n))
+
+    class _Cohort:
+        family_name = "probe-serve"
+        client_ids = np.arange(n)
+    _Cohort.apply_fn = staticmethod(apply_fn)
+    _Cohort.params = params
+
+    class _Fed:
+        n_clients = n
+        cohorts = [_Cohort]
+
+    store = SnapshotStore()
+    store.publish(_Fed, t=0.0)
+    qe = QueryEngine(store)
+
+    def replay() -> None:
+        for b in range(1, 10):
+            qe.serve([i % n for i in range(b)],
+                     np.zeros((b, 4), np.float32), t=0.0)
+
+    yield from recompile_violations("serve.engine.serve_step", serve_step,
+                                    replay, max_new_compiles=5)

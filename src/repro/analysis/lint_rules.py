@@ -140,14 +140,17 @@ def literal_interpret_default(ctx: AnalysisContext) -> Iterable[Violation]:
 
 def _live_registries() -> Dict[str, Set[str]]:
     """Lookup-function name -> the set of names its registry knows.
-    Imports ``repro.core`` so decorator registration has run."""
+    Imports ``repro.core`` and ``repro.serve`` so decorator registration
+    has run (the serve package adds query arrivals + batch policies)."""
     import repro.core  # noqa: F401  (populates policy/codec registries)
+    import repro.serve  # noqa: F401  (query arrivals, batch policies)
     from repro.analysis.registry import registered_rules
     from repro.core.policies.base import registered_policies
     from repro.core.runtime import registered_triggers
     from repro.core.schedules import registered_arrivals, \
         registered_schedules
     from repro.core.wire import registered_codecs
+    from repro.serve.queue import registered_batch_policies
 
     policies = set(registered_policies())
     codecs = set(registered_codecs())
@@ -155,12 +158,15 @@ def _live_registries() -> Dict[str, Set[str]]:
     schedules = set(registered_schedules())
     arrivals = set(registered_arrivals())
     rules = set(registered_rules())
+    batch_policies = set(registered_batch_policies())
     return {
         "get_policy": policies, "as_policy": policies,
         "get_codec": codecs, "as_codec": codecs,
         "get_trigger": triggers, "as_trigger": triggers,
         "get_schedule": schedules, "as_schedule": schedules,
         "get_arrivals": arrivals, "as_arrivals": arrivals,
+        "get_batch_policy": batch_policies,
+        "as_batch_policy": batch_policies,
         "get_rule": rules,
     }
 

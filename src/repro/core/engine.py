@@ -279,6 +279,7 @@ class FederationEngine:
                                     join_round=federation.join_round)
         self.config = config or FederationConfig()
         self.callbacks: List[RoundCallback] = list(callbacks)
+        self.publish_hooks: List[Callable[[float], None]] = []
         self.clock: Clock = SyncClock()
         federation.uplink = self.config.uplink
         federation.downlink = self.config.downlink
@@ -310,6 +311,22 @@ class FederationEngine:
 
     def add_callback(self, cb: RoundCallback) -> None:
         self.callbacks.append(cb)
+
+    # -- serving publish hooks ---------------------------------------------
+    def attach_snapshots(self, store):
+        """Publish versioned serving views of the per-client params into
+        ``store`` (any object with ``publish(federation, t)`` — normally a
+        ``repro.serve.SnapshotStore``): once immediately, then after every
+        round (sync engine) / every wake and server fire (async engine).
+        Returns the store for chaining."""
+        self.publish_hooks.append(
+            lambda t: store.publish(self.fed, t))
+        store.publish(self.fed, float(self.clock.now))
+        return store
+
+    def _publish(self, t: float) -> None:
+        for hook in self.publish_hooks:
+            hook(float(t))
 
     # -- construction ------------------------------------------------------
     @classmethod
@@ -351,6 +368,7 @@ class FederationEngine:
             self.bus.deliver(t, msg, avail_np)
         else:
             self.bus.observe(t, avail_np)
+        self._publish(t)   # fresh params become the serving snapshot
 
     # -- evaluation --------------------------------------------------------
     def evaluate(self, splits: Sequence[ClientSplit],
@@ -413,6 +431,10 @@ class AsyncFederationEngine:
         self.arrivals = as_arrivals(arrivals)
         self.config = config or FederationConfig()
         self.callbacks: List[RoundCallback] = list(callbacks)
+        self.publish_hooks: List[Callable[[float], None]] = []
+        # extension point for non-training event kinds on the shared
+        # clock (the serving runtime registers "query"/"serve-flush")
+        self.handlers: Dict[str, Callable[[Any], None]] = {}
         self.clock = Clock()
         federation.uplink = self.config.uplink
         federation.downlink = self.config.downlink
@@ -433,6 +455,8 @@ class AsyncFederationEngine:
     last_graph = FederationEngine.last_graph
     add_callback = FederationEngine.add_callback
     evaluate = FederationEngine.evaluate
+    attach_snapshots = FederationEngine.attach_snapshots
+    _publish = FederationEngine._publish
 
     @classmethod
     def build(cls, ds: FederatedDataset, splits: Sequence[ClientSplit],
@@ -500,13 +524,23 @@ class AsyncFederationEngine:
                                         (sub, msg, t))
             else:
                 self.bus.observe(t, mask)
+            self._publish(t)   # params moved: refresh the serving view
         elif ev.kind == "upload":
             sub, msg, produced_at = ev.payload
-            self.bus.deliver(t, msg, sub, produced_at=produced_at)
+            if self.bus.deliver(t, msg, sub, produced_at=produced_at):
+                self._publish(t)   # a server fire refreshed the targets
         elif ev.kind == "server-tick":
-            self.bus.tick(t)
+            if self.bus.tick(t):
+                self._publish(t)
         elif ev.kind == "eval":
             self._record(splits, t)
+        else:
+            handler = self.handlers.get(ev.kind)
+            if handler is None:
+                raise ValueError(f"no handler for event kind {ev.kind!r} "
+                                 f"(registered: "
+                                 f"{sorted(self.handlers)})")
+            handler(ev)
 
     def _record(self, splits: Sequence[ClientSplit], t: float) -> None:
         rnd = int(round(t))

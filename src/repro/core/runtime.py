@@ -49,8 +49,11 @@ from repro.data.pipeline import cohort_batch, cohort_batch_padded
 
 # Same-instant ordering: uploads merge before the server's wall tick looks
 # at the repository, wakes train after the server settles, evals observe
-# the fully-settled instant.
-_KIND_PRIORITY = {"upload": 0, "server-tick": 1, "wake": 2, "eval": 3}
+# the fully-settled instant. Serving events (repro.serve) come last:
+# queries admitted at t must see the instant's fully-settled snapshot,
+# and flush deadlines release after the queries they batch.
+_KIND_PRIORITY = {"upload": 0, "server-tick": 1, "wake": 2, "eval": 3,
+                  "query": 4, "serve-flush": 5}
 
 
 @dataclasses.dataclass(frozen=True)

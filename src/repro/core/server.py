@@ -102,7 +102,13 @@ def staleness_summary(last_upload_t: np.ndarray, active: np.ndarray,
     (``now - last_upload_t``); rows of clients that never uploaded are
     excluded. Stale rows stay in the repository (merged, never dropped),
     so this is the distribution the dynamic graph actually grades over.
-    Returns plain-python values (JSON-serializable for run summaries)."""
+    Returns plain-python values (JSON-serializable for run summaries).
+
+    The serving side measures the same quantity per RESPONSE:
+    ``repro.serve.SnapshotStore`` stamps each published snapshot with its
+    virtual publish time, and every answer reports ``now -
+    published_at`` — model-staleness in these same virtual-time units,
+    where this histogram covers repository rows."""
     last = np.asarray(last_upload_t, float)
     ages = now - last[np.asarray(active, bool) & np.isfinite(last)]
     edges = list(bins) + [np.inf]

@@ -63,7 +63,10 @@ def serve(arch: str, reduced: bool = True, batch: int = 4,
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, required=True)
-    ap.add_argument("--reduced", action="store_true", default=True)
+    # BooleanOptionalAction so --no-reduced actually reaches the full
+    # config (a bare store_true with default=True made the flag a no-op)
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--decode", type=int, default=32)

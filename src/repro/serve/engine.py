@@ -1,0 +1,165 @@
+"""Batched personalized inference: gather-from-stack + pow2 bucketing.
+
+A request batch is ``(client_ids, features)``; each client must be
+answered by ITS OWN personalized params. Instead of one forward per
+client, the serve step gathers the requested rows out of the cohort's
+stacked param pytree and runs one vmapped forward over the whole batch —
+the same stacked execution discipline the training cohorts use, so a
+batch of B requests against an N-client stack costs one compiled call
+regardless of which clients are in it.
+
+Batch sizes are padded up to power-of-two buckets before entering the
+jit (``bucket_size``), so a bursty workload with every batch size from
+1..max compiles once per bucket, not once per size — the same
+compile-reuse discipline the PR 6 ``jit-cache-bucketing`` auditor pins
+for the server's delta update (and pins here too, via the
+``serve-jit-bucketing`` rule).
+
+Responses carry the snapshot ``version`` and ``staleness`` (virtual age
+of the params at serve time), so every answer states how old the model
+that produced it is.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.snapshot import Snapshot, SnapshotStore
+
+
+def bucket_size(n: int, floor: int = 1) -> int:
+    """Smallest power of two >= max(n, floor)."""
+    if n < 1:
+        raise ValueError(f"batch size must be >= 1, got {n}")
+    n = max(n, floor)
+    return 1 << (n - 1).bit_length()
+
+
+def _serve_forward(apply_fn, params, rows, xs):
+    """Gather the requested rows from the stacked params and answer every
+    request with its own client's model.
+
+    Each request runs as a TWO-sample apply (its features plus one zero
+    ghost sample, sliced off): XLA lowers an M=1 forward as a GEMV with
+    a different accumulation order than the M>=2 GEMM the evaluation
+    kernels use, which perturbs logits at the ulp level. Keeping every
+    per-row apply at M=2 pins serving to the exact bit pattern of
+    ``engine.evaluate``'s forward — the serving-parity tests assert
+    equality with atol=0."""
+    gathered = jax.tree.map(lambda a: a[rows], params)
+
+    def one(p, x):
+        pair = jnp.concatenate([x[None], jnp.zeros_like(x[None])])
+        return apply_fn(p, pair)[0]
+
+    return jax.vmap(one)(gathered, xs)
+
+
+serve_step = jax.jit(_serve_forward, static_argnames=("apply_fn",))
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """One served request batch (already sliced back to the real B)."""
+    client_ids: np.ndarray       # (B,)
+    logits: np.ndarray           # (B, C)
+    preds: np.ndarray            # (B,)
+    version: int                 # snapshot version that answered
+    published_at: float          # its virtual publish time
+    staleness: float             # serve_time - published_at
+    buckets: Tuple[int, ...]     # pow2 bucket per cohort sub-batch
+    compute_s: float             # wall seconds of the jitted forwards
+
+    @property
+    def n(self) -> int:
+        return len(self.client_ids)
+
+
+class QueryEngine:
+    """Serves request batches from the store's current snapshot.
+
+    One ``serve`` call splits the batch by cohort (clients of different
+    architecture families live in different stacks), pads each sub-batch
+    to its power-of-two bucket, and runs one jitted gather-forward per
+    cohort. ``bucket_floor`` raises the smallest bucket (trading padding
+    FLOPs for fewer compiles); ``max_bucket`` caps compile size — bigger
+    sub-batches split into max_bucket chunks."""
+
+    def __init__(self, store: SnapshotStore, bucket_floor: int = 1,
+                 max_bucket: int = 128):
+        if bucket_floor < 1:
+            raise ValueError(f"bucket_floor must be >= 1, got "
+                             f"{bucket_floor}")
+        if max_bucket < bucket_floor:
+            raise ValueError(f"max_bucket ({max_bucket}) must be >= "
+                             f"bucket_floor ({bucket_floor})")
+        self.store = store
+        self.bucket_floor = int(bucket_floor)
+        self.max_bucket = int(max_bucket)
+
+    def _forward(self, view, rows: np.ndarray, xs: np.ndarray
+                 ) -> Tuple[jnp.ndarray, int]:
+        """One bucketed gather-forward against a cohort view."""
+        b = len(rows)
+        bucket = min(bucket_size(b, self.bucket_floor), self.max_bucket)
+        pad = bucket - b
+        # padded rows re-serve row 0 (always real: n_real >= 1) and are
+        # sliced off below — they cost FLOPs, never correctness
+        rows_p = np.concatenate([rows, np.zeros(pad, rows.dtype)]) if pad \
+            else rows
+        xs_p = np.concatenate([xs, np.zeros((pad,) + xs.shape[1:],
+                                            xs.dtype)]) if pad else xs
+        out = serve_step(view.apply_fn, view.params,
+                         jnp.asarray(rows_p), jnp.asarray(xs_p))
+        return out[:b], bucket
+
+    def serve(self, client_ids: Sequence[int], xs: np.ndarray,
+              t: float, snapshot: Optional[Snapshot] = None) -> ServeResult:
+        """Answer ``(client_ids[i], xs[i])`` for every i from one
+        consistent snapshot (default: the store's current)."""
+        snap = snapshot if snapshot is not None else self.store.current()
+        cids = np.asarray(client_ids, np.int64)
+        if cids.ndim != 1 or len(cids) != len(xs):
+            raise ValueError(f"client_ids {cids.shape} and features "
+                             f"{np.shape(xs)} disagree on batch size")
+        if cids.size and (cids.min() < 0 or cids.max() >= snap.n_clients):
+            raise ValueError(f"client id out of range [0, "
+                             f"{snap.n_clients}): {cids.tolist()}")
+        xs = np.asarray(xs)
+        logits: Optional[np.ndarray] = None
+        buckets: List[int] = []
+        compute = 0.0
+        for vi in np.unique(snap.view_of[cids]):
+            sel = np.where(snap.view_of[cids] == vi)[0]
+            view = snap.views[int(vi)]
+            rows = snap.row_of[cids[sel]]
+            xs_sel = xs[sel]
+            t0 = time.perf_counter()
+            chunks = []
+            for lo in range(0, len(sel), self.max_bucket):
+                hi = lo + self.max_bucket
+                out, bucket = self._forward(view, rows[lo:hi],
+                                            xs_sel[lo:hi])
+                chunks.append(out)
+                buckets.append(bucket)
+            part = np.asarray(jax.block_until_ready(
+                jnp.concatenate(chunks) if len(chunks) > 1 else chunks[0]))
+            compute += time.perf_counter() - t0
+            if logits is None:
+                logits = np.zeros((len(cids), part.shape[-1]),
+                                  part.dtype)
+            logits[sel] = part
+        if logits is None:
+            logits = np.zeros((0, 0), np.float32)
+        return ServeResult(
+            client_ids=cids, logits=logits,
+            preds=np.argmax(logits, -1) if len(cids) else
+            np.zeros(0, np.int64),
+            version=snap.version, published_at=snap.published_at,
+            staleness=snap.staleness(t), buckets=tuple(buckets),
+            compute_s=compute)

@@ -1,0 +1,122 @@
+"""Versioned snapshots of the federation's personalized params.
+
+Training mutates ``Cohort.params`` in place every local round; serving
+must never read a half-updated federation. The ``SnapshotStore`` gives
+queries a *consistent, versioned view*: ``publish`` captures references
+to the cohorts' stacked param pytrees (jax arrays are immutable, so a
+reference capture IS a point-in-time copy — zero bytes moved) plus the
+client -> (cohort, row) routing table, then swaps the store's current
+snapshot in one attribute assignment (atomic under the GIL).
+
+Ghost rows (device-sharding padding, ``Cohort.n_pad``) are excluded by
+construction: the routing table only maps REAL clients, so a query can
+never land on a ghost row — the padded stacks themselves are kept
+as-is, which preserves their device sharding for the gather-from-stack
+serve step.
+
+Every snapshot records its ``version`` (monotone publish counter) and
+``published_at`` (virtual publish time), so each response can report
+model staleness: how old the params that answered the query are, in the
+same virtual-time units the training runtime uses (the serving twin of
+``staleness_summary``'s repository-row ages).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class CohortView:
+    """One cohort's stacked params as captured at publish time.
+
+    ``params`` may carry ghost rows (the stack is referenced verbatim,
+    sharding and all); ``n_real`` bounds the rows queries may gather."""
+    family_name: str
+    apply_fn: Callable
+    params: Params
+    client_ids: np.ndarray      # (n_real,) global ids, row i serves them
+    n_real: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Snapshot:
+    """An immutable, consistent serving view of every client's model."""
+    version: int
+    published_at: float
+    n_clients: int
+    views: Tuple[CohortView, ...]
+    view_of: np.ndarray          # (N,) cohort-view index per client
+    row_of: np.ndarray           # (N,) row inside that view's stack
+
+    def staleness(self, now: float) -> float:
+        """Virtual age of this snapshot at query time ``now``."""
+        return max(0.0, float(now) - self.published_at)
+
+    def params_for(self, client_id: int) -> Params:
+        """The (unstacked) param pytree serving ``client_id`` — the
+        debug/parity accessor; the hot path gathers from the stack."""
+        import jax
+        view = self.views[int(self.view_of[client_id])]
+        row = int(self.row_of[client_id])
+        return jax.tree.map(lambda a: a[row], view.params)
+
+
+class SnapshotStore:
+    """Atomically-swapped snapshot sequence the engines publish into.
+
+    ``publish`` is wired to the engines' publish hooks
+    (``engine.attach_snapshots(store)``): the sync engine publishes after
+    every round, the async engine after every wake (params moved) and
+    every server fire. Readers call ``current()`` and keep the returned
+    snapshot for the whole request — later publishes never mutate it."""
+
+    def __init__(self):
+        self._current: Optional[Snapshot] = None
+        self.n_published = 0
+
+    def publish(self, federation, t: float) -> Snapshot:
+        """Capture the federation's per-client params as the next
+        snapshot version and swap it in."""
+        views = []
+        n = federation.n_clients
+        view_of = np.full(n, -1, np.int64)
+        row_of = np.full(n, -1, np.int64)
+        for vi, coh in enumerate(federation.cohorts):
+            ids = np.asarray(coh.client_ids)
+            views.append(CohortView(
+                family_name=coh.family_name, apply_fn=coh.apply_fn,
+                params=coh.params, client_ids=ids, n_real=len(ids)))
+            view_of[ids] = vi
+            row_of[ids] = np.arange(len(ids))
+        if (view_of < 0).any():
+            missing = np.where(view_of < 0)[0]
+            raise ValueError(f"clients {missing.tolist()} belong to no "
+                             f"cohort; cannot publish a total serving view")
+        self.n_published += 1
+        snap = Snapshot(version=self.n_published, published_at=float(t),
+                        n_clients=n, views=tuple(views),
+                        view_of=view_of, row_of=row_of)
+        self._current = snap   # single assignment: the atomic swap
+        return snap
+
+    def current(self) -> Snapshot:
+        snap = self._current
+        if snap is None:
+            raise RuntimeError("SnapshotStore has no published snapshot "
+                               "yet; attach it to an engine "
+                               "(engine.attach_snapshots(store)) or call "
+                               "store.publish(federation, t) first")
+        return snap
+
+    @property
+    def version(self) -> int:
+        """Version of the current snapshot (0 before the first publish)."""
+        return 0 if self._current is None else self._current.version
+
+    def staleness(self, now: float) -> float:
+        return self.current().staleness(now)

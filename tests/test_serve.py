@@ -1,0 +1,383 @@
+"""Personalized serving: snapshot store semantics, bit-exact parity
+with the evaluation forward, query workloads, and the train-and-serve
+QueryRuntime on the shared event loop.
+
+The sharded parity tests need >= 8 devices and run in the CI sharded
+lane (XLA_FLAGS=--xla_force_host_platform_device_count=8); they skip in
+the default single-device tier-1 run."""
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AsyncFederationEngine, FederationConfig,
+                        FederationEngine, get_arrivals, sqmd)
+from repro.data import make_splits, pad_like
+from repro.models.mlp import hetero_mlp_zoo
+from repro.serve import (DiurnalQueries, PoissonQueries, QueryEngine,
+                         QueryRuntime, SnapshotStore, split_query_stream)
+
+needs_mesh = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+           "(CI sharded lane)")
+
+
+@pytest.fixture(scope="module")
+def setup_small():
+    ds = pad_like(samples_per_client=16, ref_size=16, length=16)
+    splits = make_splits(ds, seed=0)
+    zoo = hetero_mlp_zoo(ds.feature_len, ds.n_classes)
+    assignment = [list(zoo)[i % 3] for i in range(ds.n_clients)]
+    return ds, splits, zoo, assignment
+
+
+CFG = dict(rounds=3, batch_size=8, eval_every=2)
+
+
+@pytest.fixture(scope="module")
+def trained(setup_small):
+    """A short-trained sync engine with an attached snapshot store."""
+    ds, splits, zoo, assignment = setup_small
+    eng = FederationEngine.build(ds, splits, zoo, assignment,
+                                 sqmd(q=8, k=4),
+                                 config=FederationConfig(**CFG), seed=7)
+    store = eng.attach_snapshots(SnapshotStore())
+    eng.fit(splits)
+    return eng, store, splits
+
+
+def eval_forward(coh, splits):
+    """``engine.evaluate``'s forward, logits kept: the vmapped
+    multi-sample apply over the cohort's stacked params."""
+    xs = jnp.stack([jnp.asarray(splits[int(c)].test_x)
+                    for c in coh.padded_ids])
+    return np.asarray(jax.vmap(coh.apply_fn)(coh.params, xs))
+
+
+# --- snapshot store semantics ---------------------------------------------
+
+def test_store_empty_until_first_publish(setup_small):
+    store = SnapshotStore()
+    assert store.version == 0
+    with pytest.raises(RuntimeError, match="no published snapshot"):
+        store.current()
+
+
+def test_publish_versions_monotone(trained):
+    eng, store, _ = trained
+    # attach publishes once, then one publish per round
+    assert store.n_published == CFG["rounds"] + 1
+    assert store.version == store.n_published
+    assert store.current().published_at == float(CFG["rounds"] - 1)
+
+
+def test_staleness_is_virtual_age(trained):
+    _, store, _ = trained
+    snap = store.current()
+    assert snap.staleness(snap.published_at) == 0.0
+    assert snap.staleness(snap.published_at + 2.5) == 2.5
+    assert snap.staleness(snap.published_at - 1.0) == 0.0  # clamped
+
+
+def test_snapshot_routing_total_and_real_only(trained):
+    eng, store, _ = trained
+    snap = store.current()
+    assert (snap.view_of >= 0).all()
+    for cid in range(snap.n_clients):
+        view = snap.views[int(snap.view_of[cid])]
+        row = int(snap.row_of[cid])
+        assert row < view.n_real            # never a ghost row
+        assert int(view.client_ids[row]) == cid
+
+
+def test_old_snapshot_immutable_after_more_training(setup_small):
+    ds, splits, zoo, assignment = setup_small
+    eng = FederationEngine.build(ds, splits, zoo, assignment,
+                                 sqmd(q=8, k=4),
+                                 config=FederationConfig(**CFG), seed=3)
+    store = eng.attach_snapshots(SnapshotStore())
+    old = store.current()
+    kept = jax.tree.map(lambda a: np.asarray(a), old.params_for(0))
+    eng.fit(splits)                        # params move, versions advance
+    assert store.version > old.version
+    for a, b in zip(jax.tree.leaves(kept),
+                    jax.tree.leaves(old.params_for(0))):
+        np.testing.assert_array_equal(a, np.asarray(b))
+
+
+def test_params_for_matches_cohort_row(trained):
+    eng, store, _ = trained
+    snap = store.current()
+    coh = eng.fed.cohorts[0]
+    cid = int(coh.client_ids[1])
+    got = snap.params_for(cid)
+    want = jax.tree.map(lambda a: a[1], coh.params)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --- serving parity: bit-identical to the evaluation forward --------------
+
+def test_parity_whole_shard_per_client(trained):
+    eng, store, splits = trained
+    qe = QueryEngine(store)
+    for coh in eng.fed.cohorts:
+        ref = eval_forward(coh, splits)
+        for row, cid in enumerate(coh.client_ids):
+            xs = np.asarray(splits[int(cid)].test_x)
+            res = qe.serve([int(cid)] * len(xs), xs, t=10.0)
+            np.testing.assert_array_equal(res.logits, ref[row])
+            np.testing.assert_array_equal(
+                res.preds, np.argmax(ref[row], -1))
+
+
+def test_parity_mixed_cross_cohort_batch(trained):
+    eng, store, splits = trained
+    qe = QueryEngine(store)
+    refs = {int(c): eval_forward(coh, splits)[r]
+            for coh in eng.fed.cohorts
+            for r, c in enumerate(coh.client_ids)}
+    cids, feats, want = [], [], []
+    for cid in [0, 3, 5, 9, 19, 26, 27]:   # all three families, odd batch
+        for k in range(2):
+            cids.append(cid)
+            feats.append(np.asarray(splits[cid].test_x)[k])
+            want.append(refs[cid][k])
+    res = qe.serve(cids, np.stack(feats), t=10.0)
+    np.testing.assert_array_equal(res.logits, np.stack(want))
+    assert all(b & (b - 1) == 0 for b in res.buckets)  # pow2 buckets
+
+
+def test_parity_single_request(trained):
+    """b=1 pads through the same M=2 ghost-sample forward — still exact."""
+    eng, store, splits = trained
+    qe = QueryEngine(store)
+    coh = eng.fed.cohorts[0]
+    cid = int(coh.client_ids[1])
+    ref = eval_forward(coh, splits)[1]
+    res = qe.serve([cid], np.asarray(splits[cid].test_x)[:1], t=10.0)
+    np.testing.assert_array_equal(res.logits[0], ref[0])
+
+
+def test_serve_validates_inputs(trained):
+    _, store, splits = trained
+    qe = QueryEngine(store)
+    x = np.asarray(splits[0].test_x)[:1]
+    with pytest.raises(ValueError, match="disagree on batch size"):
+        qe.serve([0, 1], x, t=0.0)
+    with pytest.raises(ValueError, match="out of range"):
+        qe.serve([10_000], x, t=0.0)
+
+
+def test_response_carries_version_and_staleness(trained):
+    _, store, splits = trained
+    qe = QueryEngine(store)
+    snap = store.current()
+    res = qe.serve([0], np.asarray(splits[0].test_x)[:1],
+                   t=snap.published_at + 3.0)
+    assert res.version == snap.version
+    assert res.staleness == 3.0
+
+
+# --- sharded serving (devices=8, ghost-padded rows) -----------------------
+
+@needs_mesh
+def test_parity_sharded_stack_including_last_real_row(setup_small):
+    ds, splits, zoo, assignment = setup_small
+    eng = FederationEngine.build(
+        ds, splits, zoo, assignment, sqmd(q=8, k=4),
+        config=FederationConfig(devices=8, **CFG), seed=7)
+    store = eng.attach_snapshots(SnapshotStore())
+    eng.fit(splits)
+    assert any(c.n_pad > 0 for c in eng.fed.cohorts)  # ghosts exist
+    qe = QueryEngine(store)
+    for coh in eng.fed.cohorts:
+        ref = eval_forward(coh, splits)
+        # first and LAST real rows: the last sits right against the
+        # ghost padding on the final device shard
+        for row in (0, len(coh.client_ids) - 1):
+            cid = int(coh.client_ids[row])
+            xs = np.asarray(splits[cid].test_x)
+            res = qe.serve([cid] * len(xs), xs, t=10.0)
+            np.testing.assert_array_equal(res.logits, ref[row])
+
+
+@needs_mesh
+def test_sharded_snapshot_routing_excludes_ghosts(setup_small):
+    ds, splits, zoo, assignment = setup_small
+    eng = FederationEngine.build(
+        ds, splits, zoo, assignment, sqmd(q=8, k=4),
+        config=FederationConfig(devices=8, **CFG), seed=7)
+    store = eng.attach_snapshots(SnapshotStore())
+    snap = store.current()
+    for view, coh in zip(snap.views, eng.fed.cohorts):
+        stack_rows = jax.tree.leaves(view.params)[0].shape[0]
+        assert stack_rows == view.n_real + coh.n_pad
+    assert (snap.row_of < np.asarray(
+        [snap.views[v].n_real for v in snap.view_of])).all()
+
+
+# --- query workloads ------------------------------------------------------
+
+def test_poisson_deterministic_and_sorted():
+    w = PoissonQueries(rate=0.8, seed=4)
+    a = w.wakes(6, 10.0)
+    b = PoissonQueries(rate=0.8, seed=4).wakes(6, 10.0)
+    assert [t for t, _ in a] == [t for t, _ in b]
+    times = [t for t, _ in a]
+    assert times == sorted(times) and times[-1] <= 10.0
+    assert all(m.any() for _, m in a)
+
+
+def test_poisson_rate_scales_load():
+    lo = sum(m.sum() for _, m in PoissonQueries(rate=0.2).wakes(8, 20.0))
+    hi = sum(m.sum() for _, m in PoissonQueries(rate=1.5).wakes(8, 20.0))
+    assert hi > lo * 2
+
+
+def test_poisson_registered():
+    assert isinstance(get_arrivals("query-poisson")(), PoissonQueries)
+    assert isinstance(get_arrivals("query-diurnal")(), DiurnalQueries)
+
+
+def test_diurnal_burst_crests():
+    w = DiurnalQueries(base_rate=0.3, period=8.0, burst_frac=1.0, seed=1)
+    wakes = dict(w.wakes(10, 20.0))
+    for peak in (2.0, 10.0, 18.0):       # period/4 + k*period
+        assert wakes[peak].all()          # burst_frac=1: everyone queries
+    no_burst = DiurnalQueries(base_rate=0.3, period=8.0, seed=1)
+    assert sum(m.sum() for _, m in w.wakes(10, 20.0)) > \
+        sum(m.sum() for _, m in no_burst.wakes(10, 20.0))
+
+
+def test_workload_arg_validation():
+    with pytest.raises(ValueError):
+        PoissonQueries(rate=0.0)
+    with pytest.raises(ValueError):
+        DiurnalQueries(amp=1.5)
+    with pytest.raises(ValueError):
+        DiurnalQueries(burst_frac=-0.1)
+
+
+def test_split_query_stream_replays_test_samples(setup_small):
+    _, splits, _, _ = setup_small
+    feats = split_query_stream(splits)
+    xs = np.asarray(splits[2].test_x)
+    np.testing.assert_array_equal(feats(2, 0), xs[0])
+    np.testing.assert_array_equal(feats(2, len(xs)), xs[0])  # wraps
+
+
+# --- QueryRuntime: train-and-serve on one event loop ----------------------
+
+@pytest.fixture()
+def async_pair(setup_small):
+    ds, splits, zoo, assignment = setup_small
+    eng = AsyncFederationEngine.build(
+        ds, splits, zoo, assignment, sqmd(q=8, k=4),
+        arrivals="cadence", trigger="every-k",
+        config=FederationConfig(**CFG), seed=5)
+    return eng, splits
+
+
+def test_runtime_serves_while_training(async_pair):
+    eng, splits = async_pair
+    qr = QueryRuntime(eng, workload=PoissonQueries(rate=0.6, seed=2),
+                      policy="micro:8",
+                      features=split_query_stream(splits))
+    hist = qr.run(splits, until=4.0)
+    s = qr.summary(horizon=4.0)
+    assert s["n_served"] > 0
+    assert len(hist.mean_acc) > 0                   # training happened
+    assert s["snapshots_published"] > 1             # and kept publishing
+    assert s["n_served"] + s["n_pending"] == s["n_pushed"]
+    for key in ("latency_p50_s", "latency_p99_s", "queue_depth_max",
+                "throughput_compute_qps", "staleness_mean"):
+        assert key in s
+    assert s["latency_p99_s"] >= s["latency_p50_s"] >= 0.0
+
+
+def test_runtime_answers_are_fresh_snapshots(async_pair):
+    """Published mid-run snapshots bound every answer's staleness."""
+    eng, splits = async_pair
+    qr = QueryRuntime(eng, workload=PoissonQueries(rate=0.5, seed=3),
+                      policy="immediate",
+                      features=split_query_stream(splits))
+    qr.run(splits, until=4.0)
+    versions = [r["version"] for r in sorted(qr.records,
+                                             key=lambda r: r["t_served"])]
+    assert versions == sorted(versions)             # never serve backwards
+    assert len(set(versions)) > 1                   # training refreshed it
+    assert all(r["staleness"] >= 0.0 for r in qr.records)
+    assert max(r["staleness"] for r in qr.records) < 4.0
+
+
+def test_runtime_record_parity_with_direct_eval(async_pair):
+    """Every answer recorded by the runtime is the bit-exact forward of
+    the snapshot params that served it."""
+    eng, splits = async_pair
+    qr = QueryRuntime(eng, workload=PoissonQueries(rate=0.4, seed=1),
+                      policy="micro:4",
+                      features=split_query_stream(splits))
+    qr.run(splits, until=3.0)
+    snap = qr.store.current()
+    res = qr.qengine.serve([0, 0], np.asarray(splits[0].test_x)[:2],
+                           t=3.0, snapshot=snap)
+    p = snap.params_for(0)
+    ref = np.asarray(
+        eng.fed.cohorts[int(snap.view_of[0])].apply_fn(
+            p, jnp.asarray(splits[0].test_x[:2])))
+    np.testing.assert_array_equal(res.logits, ref)
+
+
+def test_runtime_requires_feature_source(async_pair):
+    eng, _ = async_pair
+    qr = QueryRuntime(eng, workload=PoissonQueries(rate=0.5))
+    with pytest.raises(ValueError, match="no feature source"):
+        qr.seed_queries(2.0)
+
+
+def test_unknown_event_kind_raises(async_pair):
+    eng, splits = async_pair
+    eng.clock.schedule(0.5, "wormhole")
+    with pytest.raises(ValueError, match="no handler .*wormhole"):
+        eng.fit(splits, until=1.0)
+
+
+# --- launch CLIs ----------------------------------------------------------
+
+def test_serve_cli_reduced_flag_both_branches(monkeypatch):
+    """--reduced was a no-op (store_true over default=True); both
+    branches must reach serve()."""
+    from repro.launch import serve as serve_mod
+    seen = []
+    monkeypatch.setattr(serve_mod, "serve",
+                        lambda arch, reduced, **kw: seen.append(reduced)
+                        or {"arch": arch})
+    monkeypatch.setattr(serve_mod, "ARCH_IDS", ["tiny"])
+    for argv, want in ([["--arch", "tiny"], True],
+                       [["--arch", "tiny", "--reduced"], True],
+                       [["--arch", "tiny", "--no-reduced"], False]):
+        monkeypatch.setattr(sys, "argv", ["serve.py"] + argv)
+        serve_mod.main()
+    assert seen == [True, True, False]
+
+
+def test_serve_federation_cli_end_to_end(monkeypatch, tmp_path, capsys):
+    from repro.launch import serve_federation
+    out = tmp_path / "summary.json"
+    monkeypatch.setattr(sys, "argv", [
+        "serve_federation.py", "--until", "3", "--samples-per-client",
+        "16", "--ref-size", "16", "--eval-every", "2", "--query-rate",
+        "0.5", "--batch-policy", "micro", "--max-batch", "8",
+        "--json", str(out)])
+    serve_federation.main()
+    summary = json.loads(out.read_text())
+    assert summary["serving"]["n_served"] > 0
+    assert summary["serving"]["latency_p99_s"] >= \
+        summary["serving"]["latency_p50_s"]
+    assert summary["server_rounds"] >= 0
+    assert "final_acc" in summary

@@ -1,0 +1,174 @@
+"""Micro-batch admission queue + pow2 bucketed serve step: batching
+semantics (max-wait partial flush, over-capacity queueing, FIFO) and the
+jit-cache compile-reuse discipline the PR 6 auditor pins."""
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis.hlo_rules import recompile_violations
+from repro.serve import (BatchPolicy, Immediate, MicroBatch,
+                         MicroBatchQueue, QueryEngine, QueryRequest,
+                         SnapshotStore, as_batch_policy, bucket_size,
+                         get_batch_policy, register_batch_policy,
+                         registered_batch_policies, serve_step)
+
+
+def reqs(n, t, start_seq=0):
+    return [QueryRequest(client_id=i % 3, x=np.zeros(4, np.float32),
+                         t_arrival=t, seq=start_seq + i)
+            for i in range(n)]
+
+
+# --- bucket arithmetic ----------------------------------------------------
+
+def test_bucket_size_pow2():
+    assert [bucket_size(n) for n in (1, 2, 3, 4, 5, 8, 9)] == \
+        [1, 2, 4, 4, 8, 8, 16]
+    assert bucket_size(3, floor=8) == 8
+    with pytest.raises(ValueError):
+        bucket_size(0)
+
+
+# --- policy registry ------------------------------------------------------
+
+def test_policy_registry_names():
+    assert {"immediate", "micro"} <= set(registered_batch_policies())
+    assert get_batch_policy("micro") is MicroBatch
+    with pytest.raises(KeyError, match="unknown batch policy"):
+        get_batch_policy("nope")
+
+
+def test_as_batch_policy_coercions():
+    assert isinstance(as_batch_policy(None), MicroBatch)
+    p = as_batch_policy("micro:16")
+    assert p.max_batch == 16
+    inst = Immediate(max_batch=4)
+    assert as_batch_policy(inst) is inst
+    assert as_batch_policy("immediate").max_wait == 0.0
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        MicroBatch(max_batch=0)
+    with pytest.raises(ValueError):
+        MicroBatch(max_wait=-1.0)
+    with pytest.raises(ValueError, match="already registered"):
+        register_batch_policy("micro")(type("Dup", (BatchPolicy,), {}))
+
+
+# --- queue semantics ------------------------------------------------------
+
+def test_max_wait_fires_partial_batch():
+    q = MicroBatchQueue(MicroBatch(max_batch=8, max_wait=0.25))
+    deadline = q.push(reqs(3, t=1.0), t=1.0)
+    assert deadline == 1.25                     # oldest + max_wait
+    assert q.pop_due(1.1) == []                 # not yet due
+    batches = q.pop_due(1.25)
+    assert len(batches) == 1 and len(batches[0]) == 3
+    assert q.depth == 0
+
+
+def test_full_batch_releases_immediately():
+    q = MicroBatchQueue(MicroBatch(max_batch=4, max_wait=0.25))
+    assert q.push(reqs(4, t=2.0), t=2.0) == 2.0  # due right now
+    assert len(q.pop_due(2.0)) == 1
+
+
+def test_over_capacity_queues_never_drops():
+    q = MicroBatchQueue(MicroBatch(max_batch=4, max_wait=0.25))
+    q.push(reqs(10, t=0.0), t=0.0)
+    batches = q.pop_due(0.0)
+    assert [len(b) for b in batches] == [4, 4]   # fulls release now
+    assert q.depth == 2                          # tail waits for max_wait
+    tail = q.pop_due(0.25)
+    assert [len(b) for b in tail] == [2]
+    assert q.n_released == q.n_pushed == 10      # nothing dropped
+    served = [r.seq for bs in (batches + tail) for r in bs]
+    assert served == sorted(served)              # FIFO end to end
+
+
+def test_immediate_policy_zero_wait():
+    q = MicroBatchQueue(Immediate(max_batch=64))
+    assert q.push(reqs(2, t=3.0), t=3.0) == 3.0
+    assert len(q.pop_due(3.0)) == 1
+
+
+def test_push_nothing_no_deadline():
+    q = MicroBatchQueue(MicroBatch())
+    assert q.push([], t=0.0) is None
+    assert q.next_deadline() is None
+
+
+def test_next_deadline_tracks_oldest():
+    q = MicroBatchQueue(MicroBatch(max_batch=8, max_wait=0.5))
+    q.push(reqs(2, t=1.0), t=1.0)
+    q.push(reqs(2, t=1.3, start_seq=2), t=1.3)
+    assert q.next_deadline() == 1.5              # oldest rules
+
+
+# --- jit-cache bucketing (PR 6 auditor against the serve step) ------------
+
+def _toy_store(n_clients=6):
+    """A published store over one hand-built stacked cohort."""
+    from repro.models.mlp import MLPConfig, mlp_family
+
+    init_fn, apply_fn = mlp_family(MLPConfig("toy", 4, (8,), 3))
+    params = jax.vmap(init_fn)(jax.random.split(jax.random.key(0),
+                                                n_clients))
+
+    class Cohort:
+        family_name = "toy"
+        client_ids = np.arange(n_clients)
+
+    class Fed:
+        pass
+
+    Cohort.apply_fn = staticmethod(apply_fn)
+    Cohort.params = params
+    Fed.n_clients = n_clients
+    Fed.cohorts = [Cohort]
+    store = SnapshotStore()
+    store.publish(Fed, t=0.0)
+    return store
+
+
+def test_serve_step_compiles_per_bucket_not_per_size():
+    store = _toy_store()
+    qe = QueryEngine(store)
+    x = np.zeros((1, 4), np.float32)
+
+    def replay():
+        for b in (1, 2, 3, 5, 6, 7):   # buckets: 1, 2, 4, 8
+            qe.serve([0] * b, np.repeat(x, b, 0), t=0.0)
+
+    assert recompile_violations("serve.engine.serve_step", serve_step,
+                                replay, max_new_compiles=4) == []
+    # replaying the same sizes must be compile-free
+    assert recompile_violations("serve.engine.serve_step", serve_step,
+                                replay, max_new_compiles=0) == []
+
+
+def test_bucket_floor_merges_small_batches():
+    store = _toy_store()
+    qe = QueryEngine(store, bucket_floor=8)
+    x = np.zeros((3, 4), np.float32)
+    res = qe.serve([0, 1, 2], x, t=0.0)
+    assert res.buckets == (8,)
+
+
+def test_max_bucket_chunks_large_batches():
+    store = _toy_store()
+    qe = QueryEngine(store, bucket_floor=1, max_bucket=4)
+    b = 10
+    res = qe.serve([i % 6 for i in range(b)],
+                   np.zeros((b, 4), np.float32), t=0.0)
+    assert res.buckets == (4, 4, 2)
+    assert res.n == b
+
+
+def test_query_engine_ctor_validation():
+    store = _toy_store()
+    with pytest.raises(ValueError):
+        QueryEngine(store, bucket_floor=0)
+    with pytest.raises(ValueError):
+        QueryEngine(store, bucket_floor=8, max_bucket=4)
