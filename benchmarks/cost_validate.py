@@ -1,0 +1,136 @@
+"""Validate the static cost model against the measured shard benchmark.
+
+For every (n_clients, devices) cell in BENCH_shard.json this script
+predicts the three measured hot-path times from the cost model alone —
+``step_s`` from the ``cohort_step`` entry, ``upload_s`` from
+``cohort_messenger_upload``, ``graph_build_s`` from
+``divergence_matrix`` — traced at the BENCHMARK's dims (ref_size=64,
+classes=10, batch=16, feat=24, hidden=64), not the probe dims, via a
+simple additive roofline ``t = flops/F + bytes/B``.
+
+The machine constants F and B are crude, so absolute times are not the
+claim. The claim the CI lane enforces is RANK ORDER: for every pair of
+cells with the same device count and metric, the model must order
+predicted times the same way the measurements are ordered. A cost model
+that cannot rank N=256 vs N=4096 correctly has no business gating
+budgets.
+
+Writes BENCH_cost.json (predictions, measurements, every compared pair);
+``--smoke`` validates without writing. Exits non-zero on any rank miss.
+"""
+from __future__ import annotations
+
+import argparse
+import itertools
+import json
+import os
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+# crude CPU-class roofline constants (flops/s, HBM bytes/s); only the
+# flops-vs-bytes mix depends on these, never the cross-N ordering claim
+PEAK_FLOPS = 5.0e10
+PEAK_BYTES = 2.0e10
+
+# measured metric -> (cost entry, dims along which the bench sweeps)
+METRIC_ENTRIES = {
+    "step_s": "cohort_step",
+    "upload_s": "cohort_messenger_upload",
+    "graph_build_s": "divergence_matrix",
+}
+
+
+def _bench_dims(row: dict) -> dict:
+    """BENCH_shard config -> cost-entry dim overrides (matches
+    benchmarks/shard_scale.py: feat=24, hidden=(64,))."""
+    return {"n": int(row["n_clients"]), "r": int(row["ref_size"]),
+            "c": int(row["n_classes"]), "batch": int(row["batch"]),
+            "feat": 24, "hidden": 64}
+
+
+def predict_seconds(entry: str, dims: dict) -> float:
+    from repro.analysis.cost import entries, interp
+    s = interp.summarize(entries.trace_entry(entry, **dims))
+    return s.flops / PEAK_FLOPS + s.bytes / PEAK_BYTES
+
+
+def build_report(shard_rows) -> dict:
+    cells = []
+    for row in shard_rows:
+        dims = _bench_dims(row)
+        for metric, entry in METRIC_ENTRIES.items():
+            cells.append({
+                "metric": metric, "entry": entry,
+                "n_clients": int(row["n_clients"]),
+                "devices": int(row["devices"]),
+                "predicted_s": predict_seconds(entry, dims),
+                "measured_s": float(row[metric]),
+            })
+
+    # rank-order every same-device same-metric pair across N
+    pairs = []
+    keyfn = lambda c: (c["metric"], c["devices"])  # noqa: E731
+    for (metric, devices), group in itertools.groupby(
+            sorted(cells, key=lambda c: (c["metric"], c["devices"],
+                                         c["n_clients"])), key=keyfn):
+        group = list(group)
+        for a, b in itertools.combinations(group, 2):
+            pred = b["predicted_s"] / a["predicted_s"]
+            meas = b["measured_s"] / a["measured_s"]
+            pairs.append({
+                "metric": metric, "devices": devices,
+                "n_a": a["n_clients"], "n_b": b["n_clients"],
+                "predicted_ratio": pred, "measured_ratio": meas,
+                "rank_ok": (pred > 1.0) == (meas > 1.0),
+            })
+    return {
+        "machine": {"peak_flops": PEAK_FLOPS, "peak_bytes": PEAK_BYTES},
+        "cells": cells,
+        "pairs": pairs,
+        "n_pairs": len(pairs),
+        "n_rank_miss": sum(1 for p in pairs if not p["rank_ok"]),
+        "rank_order_ok": all(p["rank_ok"] for p in pairs),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--shard-json", default=str(REPO_ROOT /
+                                                "BENCH_shard.json"),
+                    help="measured shard benchmark to validate against")
+    ap.add_argument("--out", default=str(REPO_ROOT / "BENCH_cost.json"),
+                    help="where to write the comparison report")
+    ap.add_argument("--smoke", action="store_true",
+                    help="validate rank order only; write nothing")
+    args = ap.parse_args(argv)
+
+    shard_path = Path(args.shard_json)
+    if not shard_path.exists():
+        print(f"error: shard benchmark not found: {shard_path}",
+              file=sys.stderr)
+        return 2
+    rows = json.loads(shard_path.read_text())
+    report = build_report(rows)
+
+    miss = [p for p in report["pairs"] if not p["rank_ok"]]
+    for p in miss:
+        print(f"RANK MISS {p['metric']} devices={p['devices']} "
+              f"N {p['n_a']} -> {p['n_b']}: predicted ratio "
+              f"{p['predicted_ratio']:.2f} vs measured "
+              f"{p['measured_ratio']:.2f}", file=sys.stderr)
+    print(f"cost_validate: {report['n_pairs']} pairs, "
+          f"{report['n_rank_miss']} rank miss(es)")
+
+    if not args.smoke:
+        Path(args.out).write_text(json.dumps(report, indent=2) + "\n")
+        print(f"wrote {args.out}")
+    return 0 if report["rank_order_ok"] else 1
+
+
+if __name__ == "__main__":
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    raise SystemExit(main())

@@ -1,0 +1,129 @@
+"""Aggregate every BENCH_*.json into one machine-readable trajectory.
+
+Each PR's benchmarks write their own BENCH_<name>.json with their own row
+schema; cross-PR perf history therefore requires knowing every schema.
+This script flattens them all into BENCH_trajectory.json keyed by
+(bench, cell):
+
+    {"benches": {"shard": {"n_clients=256,devices=1": {"step_s": ...},
+                 "wire":  {"codec=int8,n_clients=64,...": {...}}, ...}}
+
+A row's CELL KEY is built from the identity fields it carries (codec,
+n_clients, devices, ...) in a fixed priority order; every remaining
+scalar field is a metric. Dict-shaped bench files contribute their
+``rows`` / ``cells`` lists; their top-level scalars (acceptance flags
+etc.) land under the ``_summary`` cell. Colliding cell keys get a
+deterministic ``#i`` suffix so no measurement is silently dropped.
+
+``--smoke`` validates (every bench parses, contributes cells, and the
+result is JSON-serializable) without writing — the CI hook.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+OUT_NAME = "BENCH_trajectory.json"
+
+# identity fields, in cell-key order; everything else in a row is a metric
+ID_FIELDS = ("metric", "entry", "codec", "intensity", "batch_policy",
+             "backend", "n_clients", "devices", "uploads", "ref_size",
+             "n_classes", "batch")
+
+# dict-shaped bench files: the list-valued field holding the rows
+_ROW_FIELDS = ("rows", "cells")
+
+
+def _cell_key(row: dict) -> str:
+    parts = [f"{f}={row[f]}" for f in ID_FIELDS if f in row]
+    return ",".join(parts) if parts else "_row"
+
+
+def _scalar(v) -> bool:
+    return isinstance(v, (int, float, bool, str)) or v is None
+
+
+def _metrics(row: dict) -> dict:
+    return {k: v for k, v in row.items()
+            if k not in ID_FIELDS and _scalar(v)}
+
+
+def flatten_bench(data) -> dict:
+    """One bench file's payload -> {cell_key: metrics}."""
+    rows = []
+    summary = {}
+    if isinstance(data, list):
+        rows = data
+    elif isinstance(data, dict):
+        for f in _ROW_FIELDS:
+            if isinstance(data.get(f), list):
+                rows = data[f]
+                break
+        summary = {k: v for k, v in data.items()
+                   if k not in _ROW_FIELDS and _scalar(v)}
+    else:
+        raise TypeError(f"bench payload must be a list or dict, got "
+                        f"{type(data).__name__}")
+    cells: dict = {}
+    for row in rows:
+        if not isinstance(row, dict):
+            continue
+        key = _cell_key(row)
+        if key in cells:
+            i = 1
+            while f"{key}#{i}" in cells:
+                i += 1
+            key = f"{key}#{i}"
+        cells[key] = _metrics(row)
+    if summary:
+        cells["_summary"] = summary
+    return cells
+
+
+def build_trajectory(root: Path) -> dict:
+    benches = {}
+    files = sorted(p for p in root.glob("BENCH_*.json")
+                   if p.name != OUT_NAME)
+    for p in files:
+        name = p.stem[len("BENCH_"):]
+        benches[name] = flatten_bench(json.loads(p.read_text()))
+    return {"sources": [p.name for p in files], "benches": benches}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--root", default=str(REPO_ROOT),
+                    help="directory holding the BENCH_*.json files")
+    ap.add_argument("--out", default=None,
+                    help=f"output path (default <root>/{OUT_NAME})")
+    ap.add_argument("--smoke", action="store_true",
+                    help="validate aggregation without writing")
+    args = ap.parse_args(argv)
+
+    root = Path(args.root)
+    traj = build_trajectory(root)
+    if not traj["benches"]:
+        print(f"error: no BENCH_*.json under {root}", file=sys.stderr)
+        return 2
+    empty = [n for n, cells in traj["benches"].items() if not cells]
+    if empty:
+        print(f"error: bench file(s) contributed zero cells: {empty}",
+              file=sys.stderr)
+        return 2
+    n_cells = sum(len(c) for c in traj["benches"].values())
+    print(f"trajectory: {len(traj['benches'])} bench(es), {n_cells} "
+          f"cell(s)")
+    if args.smoke:
+        json.dumps(traj)        # must be serializable even when unwritten
+        return 0
+    out = Path(args.out) if args.out else root / OUT_NAME
+    out.write_text(json.dumps(traj, indent=2, sort_keys=True) + "\n")
+    print(f"wrote {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

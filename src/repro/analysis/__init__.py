@@ -25,6 +25,7 @@ from repro.analysis import jaxpr_rules  # noqa: E402,F401
 from repro.analysis import hlo_rules  # noqa: E402,F401
 from repro.analysis import pallas_rules  # noqa: E402,F401
 from repro.analysis import lint_rules  # noqa: E402,F401
+from repro.analysis.cost import rules as cost_rules  # noqa: E402,F401
 
 __all__ = [
     "AnalysisContext", "Rule", "RuleResult", "Violation",

@@ -1,0 +1,87 @@
+"""The per-entry-point cost table + symbolic scaling fits.
+
+``cost_table`` interprets every parameterized entry at the reference
+dims; ``scaling_report`` re-traces each entry along its scale axis
+(``entries.SCALE_AXES``) and fits the leading exponent of flops / bytes /
+temp_bytes. Two estimators per metric:
+
+  * ``fit``     — least-squares slope over the whole log-log sweep
+  * ``leading`` — slope between the two LARGEST sizes, the asymptotic
+                  leading-order estimate (low-order Θ(N) terms weigh the
+                  small end of the window and drag the global fit down;
+                  the ``superlinear-memory`` rule judges ``leading``)
+
+Both are cached on the ``AnalysisContext`` so the cost rules share one
+interpretation pass per run.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional
+
+from repro.analysis.cost import entries as entries_mod
+from repro.analysis.cost import interp
+
+# the metrics budgets and scaling fits cover
+METRICS = ("flops", "bytes", "temp_bytes")
+
+
+def cost_table(ctx=None, dims: Optional[Dict[str, int]] = None
+               ) -> Dict[str, interp.CostSummary]:
+    """Entry name -> CostSummary at the reference dims (or ``dims``)."""
+    key = "cost_table" if dims is None else None
+    if ctx is not None and key and key in ctx.cache:
+        return ctx.cache[key]  # type: ignore[return-value]
+    overrides = dims or {}
+    table = {name: interp.summarize(entries_mod.trace_entry(name,
+                                                            **overrides))
+             for name in entries_mod.entry_names()}
+    if ctx is not None and key:
+        ctx.cache[key] = table
+    return table
+
+
+def leading_exponent(xs, ys) -> float:
+    """Slope between the two largest samples (see module docstring)."""
+    if len(xs) < 2:
+        raise ValueError("need >= 2 scale samples")
+    return (math.log(max(float(ys[-1]), 1.0) / max(float(ys[-2]), 1.0))
+            / math.log(float(xs[-1]) / float(xs[-2])))
+
+
+def scaling_report(ctx=None) -> Dict[str, dict]:
+    """Entry name -> {axis, values, metric: {fit, leading, samples}}."""
+    if ctx is not None and "cost_scaling" in ctx.cache:
+        return ctx.cache["cost_scaling"]  # type: ignore[return-value]
+    report: Dict[str, dict] = {}
+    for name, (axis, values) in entries_mod.SCALE_AXES.items():
+        sums = [interp.summarize(entries_mod.trace_entry(name, **{axis: v}))
+                for v in values]
+        rec: dict = {"axis": axis, "values": list(values)}
+        for m in METRICS:
+            ys = [getattr(s, m) for s in sums]
+            rec[m] = {"fit": interp.fit_exponent(values, ys),
+                      "leading": leading_exponent(values, ys),
+                      "samples": ys}
+        report[name] = rec
+    if ctx is not None:
+        ctx.cache["cost_scaling"] = report
+    return report
+
+
+def format_table(table: Dict[str, interp.CostSummary],
+                 scaling: Optional[Dict[str, dict]] = None) -> str:
+    """Human-readable cost table (the ``--cost-table`` CLI view)."""
+    lines = [f"{'entry':34s} {'flops':>11s} {'bytes':>11s} "
+             f"{'peak':>11s} {'temp':>11s}  scaling(leading)"]
+    for name in sorted(table):
+        s = table[name]
+        tail = ""
+        if scaling and name in scaling:
+            rec = scaling[name]
+            tail = "  " + " ".join(
+                f"{m}~{rec['axis']}^{rec[m]['leading']:.2f}"
+                for m in METRICS)
+        lines.append(f"{name:34s} {s.flops:11.3e} {s.bytes:11.3e} "
+                     f"{s.peak_bytes:11.3e} {s.temp_bytes:11.3e}{tail}")
+    return "\n".join(lines)

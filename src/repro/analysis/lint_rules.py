@@ -175,8 +175,13 @@ def find_unregistered_names(tree: ast.AST, relpath: str,
                             registries: Dict[str, Set[str]]
                             ) -> List[Violation]:
     """Registry lookups with a literal-string first argument naming
-    nothing registered. ``as_*`` specs carry ``name:arg`` suffixes —
-    validate the name part only."""
+    nothing registered. ``as_*`` specs may carry a parameterized
+    ``name:arg`` suffix (``"topk:2"`` wire codec, ``"micro:16"`` batch
+    policy) — the prefix must name a registered entry AND the suffix must
+    be a positive int, because that is what every parameterized registry
+    (``wire.as_codec``, ``serve.queue.as_batch_policy``) parses it as: a
+    typo'd ``"topk:2.5"`` or ``"micro:"`` dies at config-load time deep
+    in a run, so it dies here instead."""
     out = []
     for node in ast.walk(tree):
         if not isinstance(node, ast.Call):
@@ -191,7 +196,19 @@ def find_unregistered_names(tree: ast.AST, relpath: str,
             continue
         name = arg.value
         if fn_name.startswith("as_"):
-            name = name.partition(":")[0]
+            name, sep, suffix = name.partition(":")
+            if sep:
+                try:
+                    ok = int(suffix) > 0
+                except ValueError:
+                    ok = False
+                if not ok:
+                    out.append(Violation(
+                        "unregistered-registry-name",
+                        f"{relpath}:{node.lineno}",
+                        f"{fn_name}({arg.value!r}) has a malformed spec "
+                        f"suffix {suffix!r}; parameterized specs take a "
+                        f"positive int (e.g. 'topk:2', 'micro:16')"))
         if name not in registries[fn_name]:
             out.append(Violation(
                 "unregistered-registry-name", f"{relpath}:{node.lineno}",

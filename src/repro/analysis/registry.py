@@ -20,6 +20,8 @@ Families:
             (collectives, recompile/bucketing behavior)
   pallas  — intercept ``pallas_call`` invocations and validate grids
   lint    — AST checks over ``src/repro`` source text
+  cost    — static FLOP/byte/peak-memory budgets over the traced entry
+            points (``repro.analysis.cost``)
 
 A ``baseline`` (set of ``Violation.key`` strings) suppresses known,
 accepted findings; the repo's own gate runs with an EMPTY baseline.
@@ -33,7 +35,7 @@ from pathlib import Path
 from typing import (Callable, Dict, FrozenSet, Iterable, List, Optional,
                     Sequence, Tuple)
 
-FAMILIES = ("jaxpr", "hlo", "pallas", "lint")
+FAMILIES = ("jaxpr", "hlo", "pallas", "lint", "cost")
 
 # result states a rule run can end in; "error" fails the gate like a
 # violation does — a crashing auditor must never read as a passing one
@@ -90,6 +92,7 @@ class RuleResult:
         return {"rule": self.rule, "family": self.family,
                 "status": self.status, "detail": self.detail,
                 "suppressed": self.suppressed,
+                "n_findings": len(self.violations),
                 "violations": [v.as_dict() for v in self.violations]}
 
 

@@ -43,11 +43,19 @@ def _build_parser() -> argparse.ArgumentParser:
                    help="write current violations as the new baseline "
                         "(still exits nonzero this run)")
     p.add_argument("--families", nargs="+", metavar="FAMILY",
-                   help="restrict to rule families (jaxpr hlo pallas lint)")
+                   help="restrict to rule families (jaxpr hlo pallas lint "
+                        "cost)")
     p.add_argument("--rules", nargs="+", metavar="NAME",
                    help="restrict to specific rule names")
     p.add_argument("--list-rules", action="store_true",
                    help="list registered rules and exit")
+    p.add_argument("--write-budgets", nargs="?", const="", metavar="PATH",
+                   help="re-baseline the measured scalars in "
+                        "cost_budgets.json (policy sections preserved) "
+                        "and exit; PATH overrides the checked-in file")
+    p.add_argument("--cost-table", action="store_true",
+                   help="print the static cost table + scaling fits and "
+                        "exit")
     p.add_argument("--root", metavar="DIR",
                    help="package root to lint (default: the installed "
                         "src/repro)")
@@ -108,8 +116,37 @@ def main(argv=None) -> int:
             print(f"{rule.family:7s} {name}: {doc}")
         return 0
 
-    baseline = load_baseline(args.baseline) if args.baseline else frozenset()
     ctx = AnalysisContext(root=args.root) if args.root else AnalysisContext()
+
+    if args.write_budgets is not None:
+        from repro.analysis.cost import rules as cost_rules
+        path = args.write_budgets or cost_rules.BUDGETS_PATH
+        cost_rules.write_budgets(path, ctx)
+        print(f"wrote cost budgets to {path}", file=sys.stderr)
+        return 0
+
+    if args.cost_table:
+        from repro.analysis.cost import model as cost_model
+        print(cost_model.format_table(cost_model.cost_table(ctx),
+                                      cost_model.scaling_report(ctx)))
+        return 0
+
+    baseline = load_baseline(args.baseline) if args.baseline else frozenset()
+    # resolve the selection BEFORE running: a typo'd family or rule name
+    # that matches nothing must be a loud non-zero exit, not a silently
+    # green gate over zero rules
+    from repro.analysis.registry import FAMILIES, rules_for
+    try:
+        selected = rules_for(families=args.families, names=args.rules)
+    except (KeyError, ValueError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    if not selected:
+        print(f"error: selection matched zero rules "
+              f"(families={args.families}, rules={args.rules}); known "
+              f"families: {', '.join(FAMILIES)} — see --list-rules",
+              file=sys.stderr)
+        return 2
     results = run_rules(ctx, families=args.families, names=args.rules,
                         baseline=baseline)
 

@@ -341,6 +341,25 @@ def test_unregistered_registry_name_fires_and_known_names_clean():
     assert "no-such-policy" in v[0].message and v[0].where == "m.py:1"
 
 
+def test_parameterized_spec_suffix_checked():
+    regs = lint_rules._live_registries()
+    src = ('a = as_codec("topk:4")\n'              # clean: known + int
+           'b = as_batch_policy("micro:16")\n'     # clean
+           'c = as_codec("topkk:4")\n'             # bad prefix
+           'd = as_codec("topk:0")\n'              # suffix must be > 0
+           'e = as_codec("topk:2.5")\n'            # not an int
+           'f = as_batch_policy("micro:")\n'       # empty suffix
+           'g = get_codec("topk:4")\n')            # get_* takes no spec
+    v = lint_rules.find_unregistered_names(ast.parse(src), "m.py", regs)
+    by_line = {x.where: x.message for x in v}
+    assert "m.py:1" not in by_line and "m.py:2" not in by_line
+    assert "names nothing registered" in by_line["m.py:3"]
+    assert "malformed spec suffix" in by_line["m.py:4"]
+    assert "malformed spec suffix" in by_line["m.py:5"]
+    assert "malformed spec suffix" in by_line["m.py:6"]
+    assert "names nothing registered" in by_line["m.py:7"]
+
+
 def test_lint_family_clean_on_repo(ctx):
     results = run_rules(ctx, families=["lint"])
     assert results and all(r.status == "ok" for r in results), \
@@ -376,7 +395,9 @@ def test_all_builtin_rules_registered():
             "client-axis-collectives", "jit-cache-bucketing",
             "pallas-grid-divisibility", "bare-assert",
             "literal-interpret-default",
-            "unregistered-registry-name"} <= names
+            "unregistered-registry-name", "cost-budget",
+            "broadcast-blowup", "superlinear-memory",
+            "kernel-intensity"} <= names
 
 
 def test_runner_skips_below_device_floor():
