@@ -30,8 +30,8 @@ OUT_NAME = "BENCH_trajectory.json"
 
 # identity fields, in cell-key order; everything else in a row is a metric
 ID_FIELDS = ("metric", "entry", "codec", "intensity", "batch_policy",
-             "backend", "n_clients", "devices", "uploads", "ref_size",
-             "n_classes", "batch")
+             "backend", "selection", "n_probe", "n_clients", "devices",
+             "uploads", "ref_size", "n_classes", "batch")
 
 # dict-shaped bench files: the list-valued field holding the rows
 _ROW_FIELDS = ("rows", "cells")

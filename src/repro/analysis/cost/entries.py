@@ -55,6 +55,11 @@ SCALE_AXES: Dict[str, Tuple[str, Tuple[int, ...]]] = {
     "sqmd.build_graph_delta": ("n", (256, 512, 1024, 2048)),
     "divergence_matrix": ("n", (256, 512, 1024, 2048)),
     "int8_dequant_kl": ("n", (256, 512, 1024, 2048)),
+    # the IVF entries sweep wider: their whole point is the sub-quadratic
+    # tail (ncent ~ sqrt(n), candidates ~ n^{3/4}) and the low-order
+    # terms only recede at larger n
+    "centroid_assign": ("n", (256, 1024, 4096, 16384)),
+    "ivf_search": ("n", (256, 1024, 4096, 16384)),
     "serve_step": ("b", (8, 16, 32, 64)),
 }
 
@@ -199,6 +204,58 @@ def _int8_dequant_kl(d):
                 _f32(n, r), _f32(n, r))
 
 
+def _ivf_dims(d):
+    """Derived IVF population shapes, mirroring NeighborIndex defaults:
+    ncent = isqrt(n) coarse clusters, n_probe = isqrt(ncent) probed, so
+    the candidate strip width is n_probe · ceil(n/ncent) ~ n^{3/4} —
+    the sub-quadratic structure the exponent ceiling pins."""
+    import math
+    n = d["n"]
+    ncent = max(1, math.isqrt(n))
+    probe = max(1, math.isqrt(ncent))
+    cand = min(n, probe * -(-n // ncent))
+    return ncent, cand
+
+
+def _centroid_assign(d):
+    from repro.kernels import ops
+    u, r, c = d["u"], d["r"], d["c"]
+    ncent, _ = _ivf_dims(d)
+
+    def fn(q, scale, lse, centroids):
+        # wire-form reconstruction (logp = q·scale − lse) + the exact
+        # upload-vs-centroid KL strip — NeighborIndex._centroid_div
+        recon = (q.astype(jnp.float32) * scale[..., None]
+                 - lse[..., None])
+        return ops.pairwise_kl_pair(recon, centroids, backend="jnp")
+
+    return fn, (jax.ShapeDtypeStruct((u, r, c), jnp.uint8),
+                _f32(u, r), _f32(u, r), _f32(ncent, r, c))
+
+
+def _ivf_search(d):
+    from repro.kernels import ops
+    u, r, c = d["u"], d["r"], d["c"]
+    ncent, cand = _ivf_dims(d)
+
+    def fn(qu, su, lu, centroids, qc, sc, zc):
+        # assignment strip + the forward/reverse candidate strips off the
+        # int8 wire form — one NeighborIndex.update search round
+        recon = (qu.astype(jnp.float32) * su[..., None] - lu[..., None])
+        d_cent = ops.pairwise_kl_pair(recon, centroids, backend="jnp")
+        zu = jnp.zeros_like(su)
+        fwd = ops.int8_pairwise_kl_pair(qu, su, zu, qc, sc, zc,
+                                        backend="jnp")
+        rev = ops.int8_pairwise_kl_pair(qc, sc, zc, qu, su, zu,
+                                        backend="jnp")
+        return d_cent, fwd, rev
+
+    return fn, (jax.ShapeDtypeStruct((u, r, c), jnp.uint8),
+                _f32(u, r), _f32(u, r), _f32(ncent, r, c),
+                jax.ShapeDtypeStruct((cand, r, c), jnp.uint8),
+                _f32(cand, r), _f32(cand, r))
+
+
 def _serve_step(d):
     from repro.serve import engine
     apply_fn, _, params_s, _ = _cohort_param_shapes(d)
@@ -219,6 +276,8 @@ ENTRY_BUILDERS: Dict[str, Callable] = {
     "sqmd.build_graph_delta": _build_graph_delta,
     "divergence_matrix": _divergence_matrix,
     "int8_dequant_kl": _int8_dequant_kl,
+    "centroid_assign": _centroid_assign,
+    "ivf_search": _ivf_search,
     "serve_step": _serve_step,
 }
 

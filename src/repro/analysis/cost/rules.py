@@ -59,6 +59,12 @@ _POLICY_EXPONENTS: Dict[str, float] = {
     "sqmd.build_graph_delta": 1.2,
     "divergence_matrix": 2.15,
     "int8_dequant_kl": 2.15,
+    # the IVF selection path must stay SUB-quadratic in N — candidates
+    # scale ~n^{3/4} (probe · cluster size) and the coarse quantizer
+    # ~n^{1/2}; a regression to dense (N,N) work trips these long before
+    # it reaches 2.0
+    "centroid_assign": 1.2,
+    "ivf_search": 1.5,
     "serve_step": 1.2,
 }
 
@@ -103,8 +109,11 @@ def compute_budgets(ctx: Optional[AnalysisContext] = None,
         "tolerance": old.get("tolerance", _DEFAULT_TOLERANCE),
         "entries": {name: {m: getattr(s, m) for m in model.METRICS}
                     for name, s in sorted(table.items())},
-        "exponents": old.get("exponents", dict(_POLICY_EXPONENTS)),
-        "kernels": old.get("kernels", dict(_POLICY_KERNELS)),
+        # hand-tuned values in an existing budgets file win per key, but
+        # entries new to the code still pick up their policy defaults —
+        # a fresh entry must never ship without its ceiling
+        "exponents": {**_POLICY_EXPONENTS, **old.get("exponents", {})},
+        "kernels": {**_POLICY_KERNELS, **old.get("kernels", {})},
         "blowup": old.get("blowup", dict(_POLICY_BLOWUP)),
         "hlo_flops_band": old.get("hlo_flops_band", _DEFAULT_HLO_BAND),
     }

@@ -151,11 +151,21 @@ class FederationConfig:
     devices: Optional[int] = None   # shard the client axis over this many
     # devices (cohort steps + server divergence rows); None = the
     # single-device legacy path, bit-identical to every pinned trajectory
+    selection: str = "exact"        # neighbor selection: "exact" dense
+    # (N,N) divergence, or "ivf" approximate top-K index (sub-quadratic;
+    # requires delta_graph — only the incremental path has an index)
     verbose: bool = False
 
     def __post_init__(self):
         if self.rounds < 0:
             raise ValueError(f"rounds must be >= 0, got {self.rounds}")
+        if self.selection not in ("exact", "ivf"):
+            raise ValueError(f"selection must be 'exact' or 'ivf', got "
+                             f"{self.selection!r}")
+        if self.selection == "ivf" and not self.delta_graph:
+            raise ValueError("selection='ivf' requires delta_graph=True: "
+                             "the approximate index only exists on the "
+                             "incremental build_graph_delta path")
         if self.devices is not None and self.devices < 1:
             raise ValueError(f"devices must be >= 1, got {self.devices}")
         if self.batch_size < 1:
@@ -290,7 +300,8 @@ class FederationEngine:
                              trigger="every-upload",
                              backend=self.config.backend,
                              delta=self.config.delta_graph,
-                             mesh=self.mesh)
+                             mesh=self.mesh,
+                             selection=self.config.selection)
 
     # -- convenience views -------------------------------------------------
     @property
@@ -445,7 +456,8 @@ class AsyncFederationEngine:
                              trigger=as_trigger(trigger),
                              backend=self.config.backend,
                              delta=self.config.delta_graph,
-                             mesh=self.mesh)
+                             mesh=self.mesh,
+                             selection=self.config.selection)
         self._seeded_until = -1.0
 
     # -- convenience views -------------------------------------------------

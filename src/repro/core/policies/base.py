@@ -110,6 +110,13 @@ class ServerPolicy(abc.ABC):
     # it row-wise over this mesh. An ATTRIBUTE rather than a hook kwarg so
     # third-party build_graph overrides keep their signature.
     mesh = None
+    # Neighbor-selection strategy, attached by the ServerBus the same way
+    # as ``mesh``: "exact" keeps the dense (N,N) divergence path; "ivf"
+    # lets policies that support it (SQMD) switch their delta rounds to
+    # the approximate NeighborIndex — sub-quadratic state and per-upload
+    # cost for million-client graphs. Policies without an approximate
+    # path simply never read it.
+    selection = "exact"
 
     def __init__(self, protocol: Optional["Protocol"] = None):  # noqa: F821
         if protocol is None:

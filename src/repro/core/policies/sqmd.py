@@ -5,6 +5,7 @@ from __future__ import annotations
 from typing import Optional
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import graph as graph_mod
 from repro.core import quality as quality_mod
@@ -18,6 +19,10 @@ class SQMDPolicy(ServerPolicy):
 
     computes_similarity = True
 
+    def __init__(self, protocol=None):
+        super().__init__(protocol)
+        self._ivf = None  # lazily-built NeighborIndex (selection == "ivf")
+
     def build_graph(self, state, quality: jnp.ndarray, *,
                     backend: Optional[str] = None):
         # self.mesh (bus-attached) shards the O(N²·R·C) rebuild row-wise
@@ -29,7 +34,12 @@ class SQMDPolicy(ServerPolicy):
     def build_graph_delta(self, state, quality: jnp.ndarray, uploaded, *,
                           backend: Optional[str] = None):
         """O(u·N·R·C) round: scatter the uploaded rows' divergence strips
-        into the cached matrix instead of rebuilding all N² pairs."""
+        into the cached matrix instead of rebuilding all N² pairs — or,
+        under ``selection == "ivf"``, skip the (N,N) matrix entirely and
+        maintain the approximate NeighborIndex at O(u·candidates)."""
+        if self.selection == "ivf":
+            return self._build_graph_ivf(state, quality, uploaded,
+                                         backend=backend)
         div = sim_mod.update_divergence_cache(state.div_cache,
                                               state.repo_logp, uploaded,
                                               backend=backend)
@@ -40,3 +50,56 @@ class SQMDPolicy(ServerPolicy):
                                           self.protocol.q)
         return graph_mod.select_neighbors_from_div(div, cand,
                                                    self.protocol.k)
+
+    # -- approximate (IVF) path -------------------------------------------
+    def _index_for(self, state,
+                   backend: Optional[str]) -> sim_mod.NeighborIndex:
+        n, r, c = state.repo_logp.shape
+        if self._ivf is None or self._ivf.capacity != n:
+            self._ivf = sim_mod.NeighborIndex(
+                n, r, c, k=self.protocol.k, backend=backend)
+        return self._ivf
+
+    def _build_graph_ivf(self, state, quality: jnp.ndarray, uploaded, *,
+                         backend: Optional[str] = None):
+        """Sub-quadratic round: keep per-client top-L neighbor lists in
+        the IVF index and emit a graph whose similarity matrix is sparse
+        (nonzero only at realized edges). ``graph.divergence`` stays None
+        so the dense div_cache is never touched (nor trusted)."""
+        idx = self._index_for(state, backend)
+        uploaded = np.asarray(uploaded)
+        if uploaded.dtype != bool:
+            raise TypeError(f"uploaded must be a boolean mask, got dtype "
+                            f"{uploaded.dtype}")
+        active = np.asarray(state.active, bool)
+        # first fire must also ingest rows that joined before the index
+        # existed; re-uploads refresh their wire form + lists
+        ingest = (uploaded | ~idx.active_rows()) & active
+        rows = np.nonzero(ingest)[0]
+        if rows.size:
+            idx.update(rows, np.asarray(state.repo_logp)[rows])
+        idx.sync_active(active)
+        cand = np.asarray(quality_mod.candidate_mask(
+            quality, state.active, self.protocol.q), bool)
+        n = active.shape[0]
+        k = max(1, min(self.protocol.k, n - 1))
+        nbrs, ndiv = idx.select(cand, k)
+        valid = nbrs >= 0
+        count = valid.sum(axis=1)
+        safe = np.where(valid, nbrs, 0)
+        rows_ix = np.repeat(np.arange(n), k)
+        w = np.zeros((n, n), np.float32)
+        vals = np.where(valid, 1.0 / np.maximum(count, 1)[:, None], 0.0)
+        np.add.at(w, (rows_ix, safe.reshape(-1)),
+                  vals.reshape(-1).astype(np.float32))
+        sim = np.zeros((n, n), np.float32)
+        sim_vals = np.where(valid,
+                            1.0 / np.maximum(ndiv, sim_mod.EPS), 0.0)
+        # add, don't assign: invalid slots clamp to column 0 and must not
+        # clobber a realized (i, 0) edge — they contribute exactly 0
+        np.add.at(sim, (rows_ix, safe.reshape(-1)),
+                  sim_vals.reshape(-1).astype(np.float32))
+        return graph_mod.CollaborationGraph(
+            neighbors=jnp.asarray(safe.astype(np.int32)),
+            weights=jnp.asarray(w), similarity=jnp.asarray(sim),
+            candidates=jnp.asarray(cand))

@@ -377,7 +377,7 @@ class ServerBus:
                  backend: Optional[str] = None, delta: bool = False,
                  uplink: Union[None, str, wire.Codec] = None,
                  downlink: Union[None, str, wire.Codec] = None,
-                 mesh=None):
+                 mesh=None, selection: Optional[str] = None):
         self.fed = federation
         self.policy = policy
         self.trigger = as_trigger(trigger)
@@ -388,6 +388,12 @@ class ServerBus:
             # policies that shard their graph build read the mesh off
             # themselves (attribute, not hook kwarg — see ServerPolicy)
             policy.mesh = mesh
+        if selection is not None:
+            # same attribute pattern as mesh: the neighbor-selection
+            # strategy ("exact" dense matrix vs "ivf" approximate index)
+            # rides on the policy so build_graph_delta overrides keep
+            # their signature
+            policy.selection = selection
         # None => follow the Federation state bundle (engine-seeded,
         # checkpoint-restorable); an explicit codec pins this bus
         self._uplink = uplink

@@ -78,24 +78,33 @@ def int8_row_stats(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
     return jnp.concatenate(outs, axis=0)
 
 
-@functools.partial(jax.jit, static_argnames=("bn", "bm", "br", "interpret"))
-def _call(q, scale, lse, bn, bm, br, interpret):
-    n, r, c = q.shape
-    bn = min(bn, n)
-    bm = min(bm, n)
-    br = min(br, r)
-    n_pad = -n % bn
-    m_pad = -n % bm
-    r_pad = -r % br
-    # padded rows get lse = _LSE_PAD => p = 0 and the (finite) -_LSE_PAD
-    # log-prob is annihilated by it; padded clients are sliced off below
-    q_p = jnp.pad(q, ((0, max(n_pad, m_pad)), (0, r_pad), (0, 0)))
-    s_p = jnp.pad(scale.astype(jnp.float32),
-                  ((0, max(n_pad, m_pad)), (0, r_pad)))
-    l_p = jnp.pad(lse.astype(jnp.float32),
-                  ((0, max(n_pad, m_pad)), (0, r_pad)),
+def _pad_operand(q, scale, lse, rows_pad, r_pad):
+    """Pad one wire-form operand along its row/ref axes. Padded rows get
+    lse = _LSE_PAD => p = 0 and the (finite) -_LSE_PAD log-prob is
+    annihilated by it; padded rows are sliced off the output."""
+    q_p = jnp.pad(q, ((0, rows_pad), (0, r_pad), (0, 0)))
+    s_p = jnp.pad(scale.astype(jnp.float32), ((0, rows_pad), (0, r_pad)))
+    l_p = jnp.pad(lse.astype(jnp.float32), ((0, rows_pad), (0, r_pad)),
                   constant_values=_LSE_PAD)
-    gn, gm, gr = (n + n_pad) // bn, (n + m_pad) // bm, (r + r_pad) // br
+    return q_p, s_p, l_p
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bm", "br", "interpret"))
+def _call_pair(qa, sa, la, qb, sb, lb, bn, bm, br, interpret):
+    """Rectangular strip off two (possibly aliased) wire-form operands:
+    qa (U,R,C) x qb (M,R,C) -> (U,M). The square matrix passes the same
+    arrays for both sides."""
+    u, r, c = qa.shape
+    m = qb.shape[0]
+    bn = min(bn, u)
+    bm = min(bm, m)
+    br = min(br, r)
+    u_pad = -u % bn
+    m_pad = -m % bm
+    r_pad = -r % br
+    qa_p, sa_p, la_p = _pad_operand(qa, sa, la, u_pad, r_pad)
+    qb_p, sb_p, lb_p = _pad_operand(qb, sb, lb, m_pad, r_pad)
+    gn, gm, gr = (u + u_pad) // bn, (m + m_pad) // bm, (r + r_pad) // br
 
     out = pl.pallas_call(
         functools.partial(_kernel, n_r=gr, inv_r=1.0 / r),
@@ -109,11 +118,14 @@ def _call(q, scale, lse, bn, bm, br, interpret):
             pl.BlockSpec((bm, br), lambda i, j, r: (j, r)),        # lse[j]
         ],
         out_specs=pl.BlockSpec((bn, bm), lambda i, j, r: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((n + n_pad, n + m_pad), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((u + u_pad, m + m_pad), jnp.float32),
         interpret=interpret,
-    )(q_p[:n + n_pad], s_p[:n + n_pad], l_p[:n + n_pad],
-      q_p[:n + m_pad], s_p[:n + m_pad], l_p[:n + m_pad])
-    return out[:n, :n]
+    )(qa_p, sa_p, la_p, qb_p, sb_p, lb_p)
+    return out[:u, :m]
+
+
+def _call(q, scale, lse, bn, bm, br, interpret):
+    return _call_pair(q, scale, lse, q, scale, lse, bn, bm, br, interpret)
 
 
 def int8_pairwise_kl(q: jnp.ndarray, scale: jnp.ndarray, zp: jnp.ndarray,
@@ -133,3 +145,31 @@ def int8_pairwise_kl(q: jnp.ndarray, scale: jnp.ndarray, zp: jnp.ndarray,
                          f"{scale.shape}")
     lse = int8_row_stats(q, scale)
     return _call(q, scale, lse, bn, bm, br, interpret)
+
+
+def int8_pairwise_kl_pair(qa: jnp.ndarray, sa: jnp.ndarray,
+                          zpa: jnp.ndarray, qb: jnp.ndarray,
+                          sb: jnp.ndarray, zpb: jnp.ndarray,
+                          bn: int = DEFAULT_BN, bm: int = DEFAULT_BM,
+                          br: int = DEFAULT_BR,
+                          interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Rectangular Eq.2 strip straight from two int8 wire forms.
+
+    qa (U,R,C) / qb (M,R,C) uint8 codes, per-row affine params -> (U,M)
+    fp32. The IVF neighbor-search primitive: an upload's divergence
+    strips against candidate-cluster members are computed off the stored
+    wire form, never a dense fp32 decode. ``zpa``/``zpb`` are accepted
+    for wire-form API symmetry but never read (the per-row shift cancels
+    in the softmax)."""
+    del zpa, zpb
+    interpret = resolve_interpret(interpret)
+    if qa.ndim != 3 or sa.shape != qa.shape[:2]:
+        raise ValueError(f"shapes disagree: qa {qa.shape}, sa {sa.shape}")
+    if qb.ndim != 3 or sb.shape != qb.shape[:2]:
+        raise ValueError(f"shapes disagree: qb {qb.shape}, sb {sb.shape}")
+    if qa.shape[1:] != qb.shape[1:]:
+        raise ValueError(f"operands disagree on (R, C): qa {qa.shape}, "
+                         f"qb {qb.shape}")
+    la = int8_row_stats(qa, sa)
+    lb = int8_row_stats(qb, sb)
+    return _call_pair(qa, sa, la, qb, sb, lb, bn, bm, br, interpret)

@@ -94,6 +94,30 @@ def int8_pairwise_kl(q: jnp.ndarray, scale: jnp.ndarray, zp: jnp.ndarray,
                                 interpret=(backend == "interpret"), **blocks)
 
 
+# jitted for the same reason as the square form: the double dequant +
+# strip matmul fuse into one compiled call on the jnp path
+_int8_pair_ref_jit = jax.jit(_ref.int8_pairwise_kl_pair_ref)
+
+
+def int8_pairwise_kl_pair(qa: jnp.ndarray, sa: jnp.ndarray,
+                          zpa: jnp.ndarray, qb: jnp.ndarray,
+                          sb: jnp.ndarray, zpb: jnp.ndarray,
+                          backend: Optional[str] = None,
+                          **blocks) -> jnp.ndarray:
+    """Rectangular Eq.2 strip between two int8 wire forms.
+
+    qa (U,R,C) / qb (M,R,C) uint8 codes with per-row affine scale/zp
+    (``wire.Int8`` payload fields) -> (U,M) fp32. The IVF neighbor-search
+    primitive: upload-vs-candidate divergence strips computed straight
+    off the stored wire form."""
+    backend = backend or default_backend()
+    if backend == "jnp":
+        return _int8_pair_ref_jit(qa, sa, zpa, qb, sb, zpb)
+    return _dk.int8_pairwise_kl_pair(qa, sa, zpa, qb, sb, zpb,
+                                     interpret=(backend == "interpret"),
+                                     **blocks)
+
+
 def soft_ce(logits: jnp.ndarray, labels: jnp.ndarray,
             backend: Optional[str] = None, **blocks) -> jnp.ndarray:
     """Eq.1 quality scores. logits (N,R,C), labels (R,) -> (N,) fp32."""

@@ -69,6 +69,22 @@ def int8_pairwise_kl_ref(q: jnp.ndarray, scale: jnp.ndarray,
     return pairwise_kl_ref(int8_dequant_ref(q, scale, zp))
 
 
+def int8_pairwise_kl_pair_ref(qa: jnp.ndarray, sa: jnp.ndarray,
+                              zpa: jnp.ndarray, qb: jnp.ndarray,
+                              sb: jnp.ndarray,
+                              zpb: jnp.ndarray) -> jnp.ndarray:
+    """Rectangular Eq. 2 strip between two int8-encoded stacks.
+
+    qa (U,R,C) / qb (M,R,C) uint8 codes with per-row affine params ->
+    (U,M) fp32. The oracle for the rectangular fused dequant->KL kernel:
+    dequantize both sides, then the rectangular strip. The square matrix
+    is the a == b special case; the IVF neighbor search computes only
+    upload-vs-candidate strips off the wire form.
+    """
+    return pairwise_kl_pair_ref(int8_dequant_ref(qa, sa, zpa),
+                                int8_dequant_ref(qb, sb, zpb))
+
+
 def soft_ce_ref(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
     """Eq. 1 quality: g[n] = sum_i H(softmax(logits[n,i]), y_i).
 

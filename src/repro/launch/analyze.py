@@ -110,10 +110,18 @@ def main(argv=None) -> int:
                                          run_rules, write_baseline)
 
     if args.list_rules:
+        by_family: dict = {}
         for name in registered_rules():
-            rule = get_rule(name)
-            doc = rule.doc.splitlines()[0] if rule.doc else ""
-            print(f"{rule.family:7s} {name}: {doc}")
+            by_family.setdefault(get_rule(name).family, []).append(name)
+        total = sum(len(v) for v in by_family.values())
+        print(f"{total} rule(s) in {len(by_family)} family(ies)")
+        for family in sorted(by_family):
+            names = by_family[family]
+            print(f"\n[{family}] — {len(names)} rule(s)")
+            for name in names:
+                rule = get_rule(name)
+                doc = rule.doc.splitlines()[0] if rule.doc else ""
+                print(f"  {name}: {doc}")
         return 0
 
     ctx = AnalysisContext(root=args.root) if args.root else AnalysisContext()

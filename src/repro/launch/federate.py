@@ -107,6 +107,11 @@ def main() -> None:
     ap.add_argument("--delta", action="store_true",
                     help="incremental O(u·N) server graph updates from the "
                          "divergence cache (vs full O(N^2) rebuild)")
+    ap.add_argument("--selection", choices=("exact", "ivf"),
+                    default="exact",
+                    help="neighbor selection: exact dense (N,N) divergence "
+                         "or the approximate IVF top-K index "
+                         "(sub-quadratic; requires --delta)")
     ap.add_argument("--uplink", default="dense32",
                     help="messenger wire codec, client->server "
                          f"({', '.join(registered_codecs())}; "
@@ -153,6 +158,9 @@ def main() -> None:
     args = ap.parse_args()
     if args.rounds < 1:
         ap.error("--rounds must be >= 1")
+    if args.selection == "ivf" and not args.delta:
+        ap.error("--selection ivf requires --delta (the approximate index "
+                 "only exists on the incremental graph path)")
     for which in ("uplink", "downlink"):
         try:
             as_codec(getattr(args, which))
@@ -174,6 +182,7 @@ def main() -> None:
                               delta_graph=args.delta,
                               uplink=args.uplink, downlink=args.downlink,
                               devices=args.devices,
+                              selection=args.selection,
                               verbose=True)
     t0 = time.time()
     if args.clock == "event":
@@ -218,6 +227,8 @@ def main() -> None:
         summary["graph"] = hist.graph_stats[-1]
     if args.devices:
         summary["devices"] = args.devices
+    if args.selection != "exact":
+        summary["selection"] = args.selection
     if args.ckpt:
         from repro.checkpoint import save_federation
         save_federation(args.ckpt, engine.fed, step=args.rounds,
