@@ -267,6 +267,39 @@ def _serve_step(d):
     return fn, (params_s, _i32(b), _f32(b, d["feat"]))
 
 
+def _zoo_cohort_step(family: str):
+    """cohort_step traced through a REGISTERED zoo family (its real
+    builder + its real per-family default optimizer), so every
+    architecture's training step carries its own budget — a regression
+    in, say, the transformer adapter cannot hide inside the MLP probe."""
+    def build(d):
+        from repro.core import client
+        from repro.models.zoo import get_family
+        spec = get_family(family)
+        init_fn, apply_fn = spec.builder(d["feat"], d["c"])
+        optimizer = spec.make_optimizer()
+        n, b, f = d["n"], d["batch"], d["feat"]
+
+        def shapes():
+            keys = jax.random.split(jax.random.key(0), n)
+            params = jax.vmap(init_fn)(keys)
+            opt_state = jax.vmap(optimizer.init)(params)
+            return params, opt_state
+
+        params_s, opt_s = jax.eval_shape(shapes)
+
+        def fn(params, opt_state, bx, by, ref_x, targets, trainable):
+            return client._cohort_step(apply_fn, optimizer, params,
+                                       opt_state, bx, by, ref_x, targets,
+                                       trainable, 0.5, True)
+
+        args = (params_s, opt_s, _f32(n, b, f), _i32(n, b), _f32(d["r"], f),
+                _f32(n, d["r"], d["c"]),
+                jax.ShapeDtypeStruct((n,), jnp.bool_))
+        return fn, args
+    return build
+
+
 ENTRY_BUILDERS: Dict[str, Callable] = {
     "cohort_step": _cohort_step,
     "cohort_messenger_upload": _messenger_upload(None),
@@ -280,6 +313,20 @@ ENTRY_BUILDERS: Dict[str, Callable] = {
     "ivf_search": _ivf_search,
     "serve_step": _serve_step,
 }
+
+
+def _register_zoo_entries() -> None:
+    """One ``cohort_step[<family>]`` entry per registered zoo family —
+    registry-driven so a newly registered architecture gets a budget (and
+    a Θ(n) scaling sweep) without touching this file."""
+    from repro.models.zoo import registered_families
+    for fam in registered_families():
+        name = f"cohort_step[{fam}]"
+        ENTRY_BUILDERS[name] = _zoo_cohort_step(fam)
+        SCALE_AXES[name] = ("n", (32, 64, 128, 256))
+
+
+_register_zoo_entries()
 
 
 def trace_entry(name: str, **overrides):

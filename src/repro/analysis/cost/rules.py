@@ -68,6 +68,19 @@ _POLICY_EXPONENTS: Dict[str, float] = {
     "serve_step": 1.2,
 }
 
+
+def _zoo_exponents() -> None:
+    # every zoo family's cohort step must stay Θ(n) in clients — the vmap
+    # over the cohort axis is embarrassingly parallel for EVERY
+    # architecture, so a cross-client intermediate (an accidental (n,n,·)
+    # attention or conv buffer) is a bug regardless of family
+    from repro.models.zoo import registered_families
+    for fam in registered_families():
+        _POLICY_EXPONENTS[f"cohort_step[{fam}]"] = 1.2
+
+
+_zoo_exponents()
+
 # hand-set policy: roofline intensity floors (flops per argument+result
 # byte) per kernel oracle — roughly half the measured intensity at the
 # probe dims, so a kernel that loses its fusion (e.g. a dequant that
@@ -80,7 +93,16 @@ _POLICY_KERNELS: Dict[str, Dict[str, float]] = {
     "neighbor_mean": {"intensity_floor": 5.0},
 }
 
-_POLICY_BLOWUP = {"ratio": 32.0, "floor_bytes": 4096, "allow": {}}
+# allow: sequence-adapter intermediates that LOOK like blowups at the
+# tiny probe dims but are XLA-fusable and bounded by the adapter shapes —
+# the patch-embed dot broadcasts (S, patch)·(patch, d) across the cohort
+# axis, and the SSM causal-conv pad widens the channel axis before the
+# depthwise conv; neither grows with n beyond the stacked batch itself
+_POLICY_BLOWUP = {"ratio": 32.0, "floor_bytes": 4096, "allow": {
+    "cohort_step[transformer]": ["dot_general"],
+    "cohort_step[rglru]": ["dot_general"],
+    "cohort_step[ssm]": ["dot_general", "pad"],
+}}
 _DEFAULT_TOLERANCE = 0.35
 _DEFAULT_HLO_BAND = 3.0
 

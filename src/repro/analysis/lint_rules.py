@@ -150,6 +150,7 @@ def _live_registries() -> Dict[str, Set[str]]:
     from repro.core.schedules import registered_arrivals, \
         registered_schedules
     from repro.core.wire import registered_codecs
+    from repro.models.zoo import registered_families
     from repro.serve.queue import registered_batch_policies
 
     policies = set(registered_policies())
@@ -159,6 +160,7 @@ def _live_registries() -> Dict[str, Set[str]]:
     arrivals = set(registered_arrivals())
     rules = set(registered_rules())
     batch_policies = set(registered_batch_policies())
+    families = set(registered_families())
     return {
         "get_policy": policies, "as_policy": policies,
         "get_codec": codecs, "as_codec": codecs,
@@ -168,6 +170,7 @@ def _live_registries() -> Dict[str, Set[str]]:
         "get_batch_policy": batch_policies,
         "as_batch_policy": batch_policies,
         "get_rule": rules,
+        "get_family": families, "as_family": families,
     }
 
 

@@ -1,5 +1,6 @@
-from repro.checkpoint.io import (latest_step, restore_pytree, save_pytree,
+from repro.checkpoint.io import (ZooMismatchError, latest_step,
+                                 restore_pytree, save_pytree,
                                  restore_federation, save_federation)
 
-__all__ = ["latest_step", "restore_pytree", "save_pytree",
-           "restore_federation", "save_federation"]
+__all__ = ["ZooMismatchError", "latest_step", "restore_pytree",
+           "save_pytree", "restore_federation", "save_federation"]

@@ -17,6 +17,15 @@ import msgpack
 import numpy as np
 
 
+class ZooMismatchError(ValueError):
+    """A checkpoint's cohort families don't match the live federation's
+    zoo. Raised BEFORE any state is assigned (a partial restore would
+    leave the federation half-overwritten), naming exactly which families
+    are missing on each side — not a shape error deep in pytree
+    unflattening. Subclasses ValueError so legacy ``except ValueError``
+    callers keep working."""
+
+
 def _encode(obj: Any):
     if isinstance(obj, (jnp.ndarray, np.ndarray)):
         arr = np.asarray(obj)
@@ -86,6 +95,7 @@ def save_federation(ckpt_dir: str, fed, step: int, bus=None) -> None:
     quorum engine double-fires or skips its first server round."""
     tree = {
         "server": fed.server._asdict(),
+        "zoo": [c.family_name for c in fed.cohorts],
         "cohorts": [{
             "family": c.family_name,
             "client_ids": np.asarray(c.client_ids),
@@ -125,6 +135,26 @@ def restore_federation(ckpt_dir: str, fed, step: Optional[int] = None,
         # (ops dispatch: chunked at large N, platform backend)
         from repro.kernels import ops
         server["div_cache"] = ops.pairwise_kl(server["repo_logp"])
+    # validate the zoo BEFORE assigning anything: a family mismatch must
+    # be a clean typed error naming the families, never a half-restored
+    # federation or a pytree-unflatten crash
+    saved_fams = [s["family"] for s in tree["cohorts"]]
+    live_fams = [c.family_name for c in fed.cohorts]
+    if saved_fams != live_fams:
+        missing = [f for f in saved_fams if f not in live_fams]
+        extra = [f for f in live_fams if f not in saved_fams]
+        detail = []
+        if missing:
+            detail.append(f"checkpoint families missing from the live "
+                          f"zoo: {missing}")
+        if extra:
+            detail.append(f"live families absent from the checkpoint: "
+                          f"{extra}")
+        if not detail:
+            detail.append("cohort order changed")
+        raise ZooMismatchError(
+            f"cohort layout changed: checkpoint has {saved_fams}, live "
+            f"federation has {live_fams} — {'; '.join(detail)}")
     fed.server = ServerState(**server)
     codecs = tree.get("wire") or {}
     fed.uplink = codecs.get("uplink", "dense32")
@@ -135,11 +165,6 @@ def restore_federation(ckpt_dir: str, fed, step: Optional[int] = None,
     if "targets" in tree:
         fed.targets = tree["targets"]
     for c, saved in zip(fed.cohorts, tree["cohorts"]):
-        if c.family_name != saved["family"]:
-            # ValueError (not assert): guard must survive python -O
-            raise ValueError(
-                f"cohort layout changed: checkpoint family "
-                f"{saved['family']!r} != live cohort {c.family_name!r}")
         c.params = saved["params"]
         c.opt_state = _optstate_from_tree(saved["opt_state"],
                                           c.real_opt_state)

@@ -39,6 +39,8 @@ class Cohort:
     data: Dict[str, jnp.ndarray]         # {x (n_c+n_pad,M,L), y (..,M)}
     n_pad: int = 0                       # ghost rows (device-multiple pad)
     sharding: Any = None                 # NamedSharding of the stacks
+    optimizer: Optional[Optimizer] = None   # per-family optimizer; None
+    # falls back to the federation-wide default (legacy cohorts)
 
     @property
     def n_clients(self) -> int:
@@ -81,7 +83,7 @@ def make_cohort(family_name: str, init_fn, apply_fn, optimizer: Optimizer,
     params = jax.vmap(init_fn)(keys)
     opt_state = jax.vmap(optimizer.init)(params)
     return Cohort(family_name, apply_fn, params, opt_state,
-                  np.asarray(client_ids), data)
+                  np.asarray(client_ids), data, optimizer=optimizer)
 
 
 def _client_loss(apply_fn, params, x, y, ref_x, targets, rho: float,

@@ -197,18 +197,28 @@ def _build_mesh(config: FederationConfig):
 
 def _init_federation(ds: FederatedDataset, splits: Sequence[ClientSplit],
                      families: Dict[str, Tuple[Callable, Callable]],
-                     assignment: Sequence[str],
+                     assignment: Union[None, str, Sequence[str]],
                      policy: Union[str, Protocol, ServerPolicy],
                      *, optimizer: Optional[Optimizer] = None, seed: int = 0,
                      schedule: Union[None, str, Schedule] = None,
                      join_round: Optional[Sequence[int]] = None
                      ) -> Tuple[Federation, ServerPolicy, Schedule]:
     """Shared state construction for both engines. families:
-    {name: (init_fn, apply_fn)}; assignment[n] = family of client n (the
-    paper's Table-I #ResNet8/20/50 ratios)."""
-    optimizer = optimizer or sgd(0.05, momentum=0.9)
+    {name: (init_fn, apply_fn)} (a plain dict or a ``repro.models.zoo.Zoo``
+    carrying per-family default optimizers); assignment[n] = family of
+    client n, or a spec string — ``"fam:w,..."`` weighted shares (the
+    paper's Table-I #ResNet8/20/50 ratios) / ``"fam,fam"`` round-robin /
+    None for round-robin over all families."""
+    default_opt = optimizer or sgd(0.05, momentum=0.9)
+    # per-family optimizer defaults ride along on zoo-built family maps;
+    # an EXPLICIT optimizer argument overrides them federation-wide
+    fam_opts: Dict[str, Optimizer] = {} if optimizer is not None else (
+        getattr(families, "optimizers", None) or {})
     key = jax.random.key(seed)
     n = ds.n_clients
+    if assignment is None or isinstance(assignment, str):
+        from repro.models.zoo import parse_assignment
+        assignment = parse_assignment(assignment, list(families), n)
     if len(assignment) != n:
         raise ValueError(f"assignment has {len(assignment)} entries for "
                          f"{n} clients")
@@ -221,7 +231,8 @@ def _init_federation(ds: FederatedDataset, splits: Sequence[ClientSplit],
         key, sub = jax.random.split(key)
         data = pack_cohort([splits[i] for i in ids])
         data = {k: jnp.asarray(v) for k, v in data.items()}
-        cohorts.append(make_cohort(fam, init_fn, apply_fn, optimizer,
+        cohorts.append(make_cohort(fam, init_fn, apply_fn,
+                                   fam_opts.get(fam, default_opt),
                                    ids, data, sub))
     server = init_server(n, len(ds.ref_y), ds.n_classes)
     if type(pol).setup is not ServerPolicy.setup:
@@ -233,7 +244,7 @@ def _init_federation(ds: FederatedDataset, splits: Sequence[ClientSplit],
     fed = Federation(
         cohorts=cohorts, server=server, protocol=pol.protocol,
         ref_x=jnp.asarray(ds.ref_x), ref_y=jnp.asarray(ds.ref_y),
-        optimizer=optimizer, n_clients=n,
+        optimizer=default_opt, n_clients=n,
         static_weights=getattr(pol, "static_weights", None),
         join_round=(sched.join_round if isinstance(sched, StagedJoin)
                     else None),
@@ -343,7 +354,7 @@ class FederationEngine:
     @classmethod
     def build(cls, ds: FederatedDataset, splits: Sequence[ClientSplit],
               families: Dict[str, Tuple[Callable, Callable]],
-              assignment: Sequence[str],
+              assignment: Union[None, str, Sequence[str]],
               policy: Union[str, Protocol, ServerPolicy],
               *, config: Optional[FederationConfig] = None,
               schedule: Union[None, str, Schedule] = None,
@@ -351,7 +362,8 @@ class FederationEngine:
               join_round: Optional[Sequence[int]] = None,
               callbacks: Sequence[RoundCallback] = ()) -> "FederationEngine":
         """families: {name: (init_fn, apply_fn)}; assignment[n] = family of
-        client n (the paper's Table-I #ResNet8/20/50 ratios)."""
+        client n, or a spec string (``"fam:w,..."`` weighted / ``"fam,fam"``
+        round-robin / None — the paper's Table-I #ResNet8/20/50 ratios)."""
         fed, pol, sched = _init_federation(
             ds, splits, families, assignment, policy, optimizer=optimizer,
             seed=seed, schedule=schedule, join_round=join_round)
@@ -473,7 +485,7 @@ class AsyncFederationEngine:
     @classmethod
     def build(cls, ds: FederatedDataset, splits: Sequence[ClientSplit],
               families: Dict[str, Tuple[Callable, Callable]],
-              assignment: Sequence[str],
+              assignment: Union[None, str, Sequence[str]],
               policy: Union[str, Protocol, ServerPolicy],
               *, arrivals: Union[None, str, Schedule, ArrivalProcess] = None,
               trigger: Union[None, str, Trigger] = None,

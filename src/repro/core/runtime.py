@@ -271,10 +271,14 @@ class ClientRuntime:
         self.mesh = mesh
         self.ever_woken = np.zeros(federation.n_clients, bool)
         if mesh is not None:
-            from repro.sharding import place_cohort_stacks
+            from repro.sharding import cohort_mesh, place_cohort_stacks
             for coh in federation.cohorts:
                 if coh.sharding is None:
-                    place_cohort_stacks(coh, mesh)
+                    # each arch bucket gets its own (sub)mesh: buckets
+                    # smaller than the device count live on a device
+                    # subset instead of ghost-padding up to it
+                    place_cohort_stacks(coh, cohort_mesh(mesh,
+                                                         coh.n_clients))
 
     @property
     def uplink(self) -> wire.Codec:
@@ -291,10 +295,14 @@ class ClientRuntime:
             fed.targets = jnp.full((n, r, c), 1.0 / c, jnp.float32)
         self.ever_woken |= mask_np
         avail = jnp.asarray(mask_np)
-        step = (cohort_step if self.mesh is None
-                else sharded_cohort_step(self.mesh))
         for _ in range(cfg.local_steps):
             for coh in fed.cohorts:
+                # cohorts are independently placed: each runs on its own
+                # (sub)mesh's pinned jit; per-family optimizers override
+                # the federation-wide default when the zoo set them
+                step = (cohort_step if coh.sharding is None
+                        else sharded_cohort_step(coh.sharding.mesh))
+                opt = coh.optimizer or fed.optimizer
                 fed.rng, sub = jax.random.split(fed.rng)
                 if coh.n_pad == 0:
                     batch = cohort_batch(sub, coh.data, cfg.batch_size)
@@ -309,9 +317,18 @@ class ClientRuntime:
                     # force them out of the trainable mask regardless
                     on = avail[rows] & (jnp.arange(coh.n_rows)
                                         < coh.n_clients)
+                tgt = fed.targets[rows]
+                if (self.mesh is not None and coh.sharding is not None
+                        and coh.sharding.mesh.devices.size
+                        < self.mesh.devices.size):
+                    # tiny bucket on a device subset: the target rows may
+                    # be committed to the FULL device set (the server
+                    # emits mesh-wide); re-place them on the bucket's
+                    # submesh so the pinned jit sees one device set
+                    tgt = jax.device_put(tgt, coh.sharding)
                 coh.params, coh.opt_state, _ = step(
-                    coh.apply_fn, fed.optimizer, coh.params, coh.opt_state,
-                    batch["x"], batch["y"], fed.ref_x, fed.targets[rows],
+                    coh.apply_fn, opt, coh.params, coh.opt_state,
+                    batch["x"], batch["y"], fed.ref_x, tgt,
                     on, self.policy.rho, use_ref)
 
     def collect_messengers(self,
@@ -322,18 +339,30 @@ class ClientRuntime:
         masked out of the merge anyway)."""
         fed = self.fed
         n, r, c = fed.server.repo_logp.shape
-        up = (cohort_messenger_upload if self.mesh is None
-              else sharded_messenger_upload(self.mesh))
         parts, rows = [], []
         for coh in fed.cohorts:
             if mask_np is not None and not mask_np[coh.client_ids].any():
                 continue
+            up = (cohort_messenger_upload if coh.sharding is None
+                  else sharded_messenger_upload(coh.sharding.mesh))
             part = up(coh.apply_fn, coh.params, fed.ref_x,
                       codec=self.uplink)
             if coh.n_pad:
                 # ghost rows never upload: slice the payload back to the
                 # real clients before it enters the N-stack
                 part = wire.gather(part, np.arange(coh.n_clients))
+            if (self.mesh is not None and coh.sharding is not None
+                    and coh.sharding.mesh.devices.size
+                    < self.mesh.devices.size):
+                # tiny-bucket payloads live on a device subset; replicate
+                # them over the full mesh so the N-stack scatter sees one
+                # device set across all cohorts
+                from jax.sharding import NamedSharding, PartitionSpec
+                rep = NamedSharding(self.mesh, PartitionSpec())
+                part = wire.Payload(
+                    part.codec, part.domain, part.shape,
+                    {k: jax.device_put(a, rep)
+                     for k, a in part.arrays.items()})
             parts.append(part)
             rows.append(coh.client_ids)
         if not parts:

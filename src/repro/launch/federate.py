@@ -42,7 +42,7 @@ from repro.core import (ArrivalProcess, AsyncFederationEngine,
                         registered_arrivals, registered_codecs,
                         registered_policies, registered_triggers)
 from repro.data import fmnist_like, make_splits, pad_like, sc_like
-from repro.models.mlp import hetero_mlp_zoo
+from repro.models.zoo import build_zoo, registered_families
 
 DATASETS = {"sc_like": sc_like, "pad_like": pad_like,
             "fmnist_like": fmnist_like}
@@ -150,6 +150,15 @@ def main() -> None:
     ap.add_argument("--trigger-k", type=int, default=8)
     ap.add_argument("--trigger-period", type=float, default=1.0)
     ap.add_argument("--quorum-frac", type=float, default=0.5)
+    ap.add_argument("--zoo", default="mlp-s,mlp-m,mlp-l",
+                    help="comma-separated model families "
+                         f"({', '.join(registered_families())}); the "
+                         "default MLP tiers are bit-identical to every "
+                         "pinned trajectory")
+    ap.add_argument("--assignment",
+                    help="family per client: 'fam:w,...' weighted shares "
+                         "(the paper's Table-I ratios) or 'fam,fam,...' "
+                         "round-robin; default round-robins --zoo")
     ap.add_argument("--samples-per-client", type=int, default=60)
     ap.add_argument("--ref-size", type=int, default=120)
     ap.add_argument("--label-noise", type=float, default=0.3)
@@ -170,8 +179,15 @@ def main() -> None:
     ds = DATASETS[args.dataset](samples_per_client=args.samples_per_client,
                                 ref_size=args.ref_size)
     splits = make_splits(ds, seed=args.seed, label_noise=args.label_noise)
-    zoo = hetero_mlp_zoo(ds.feature_len, ds.n_classes)
-    assignment = [list(zoo)[i % 3] for i in range(ds.n_clients)]
+    try:
+        from repro.models.zoo import parse_assignment
+        zoo = build_zoo(args.zoo, ds.feature_len, ds.n_classes)
+        # derived from len(zoo), never a hard-coded modulus: any family
+        # count round-robins correctly (and weighted specs validate)
+        assignment = parse_assignment(args.assignment, list(zoo),
+                                      ds.n_clients)
+    except (KeyError, ValueError) as e:
+        ap.error(str(e))
 
     protocol = Protocol(args.policy, rho=args.rho, q=args.q, k=args.k,
                         interval=args.interval)
@@ -229,6 +245,10 @@ def main() -> None:
         summary["devices"] = args.devices
     if args.selection != "exact":
         summary["selection"] = args.selection
+    if args.zoo != "mlp-s,mlp-m,mlp-l":
+        summary["zoo"] = args.zoo
+    if args.assignment:
+        summary["assignment"] = args.assignment
     if args.ckpt:
         from repro.checkpoint import save_federation
         save_federation(args.ckpt, engine.fed, step=args.rounds,

@@ -32,7 +32,8 @@ from repro.core import (AsyncFederationEngine, FederationConfig, Protocol,
                         registered_policies, registered_triggers)
 from repro.data import make_splits
 from repro.launch.federate import DATASETS, make_arrivals, make_trigger
-from repro.models.mlp import hetero_mlp_zoo
+from repro.models.zoo import (build_zoo, parse_assignment,
+                              registered_families)
 from repro.serve import (DiurnalQueries, PoissonQueries, QueryRuntime,
                          get_batch_policy, registered_batch_policies,
                          split_query_stream)
@@ -117,6 +118,13 @@ def main() -> None:
     ap.add_argument("--bucket-floor", type=int, default=1)
     ap.add_argument("--max-bucket", type=int, default=128)
     # --- data / misc ---
+    ap.add_argument("--zoo", default="mlp-s,mlp-m,mlp-l",
+                    help="comma-separated model families "
+                         f"({', '.join(registered_families())})")
+    ap.add_argument("--assignment",
+                    help="family per client: 'fam:w,...' weighted or "
+                         "'fam,fam,...' round-robin; default round-robins "
+                         "--zoo")
     ap.add_argument("--samples-per-client", type=int, default=60)
     ap.add_argument("--ref-size", type=int, default=120)
     ap.add_argument("--label-noise", type=float, default=0.3)
@@ -133,8 +141,12 @@ def main() -> None:
     ds = DATASETS[args.dataset](samples_per_client=args.samples_per_client,
                                 ref_size=args.ref_size)
     splits = make_splits(ds, seed=args.seed, label_noise=args.label_noise)
-    zoo = hetero_mlp_zoo(ds.feature_len, ds.n_classes)
-    assignment = [list(zoo)[i % 3] for i in range(ds.n_clients)]
+    try:
+        zoo = build_zoo(args.zoo, ds.feature_len, ds.n_classes)
+        assignment = parse_assignment(args.assignment, list(zoo),
+                                      ds.n_clients)
+    except (KeyError, ValueError) as e:
+        ap.error(str(e))
 
     protocol = Protocol(args.policy, rho=args.rho, q=args.q, k=args.k,
                         interval=args.interval)

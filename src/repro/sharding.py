@@ -381,6 +381,20 @@ def client_sharding(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P(CLIENT_AXIS))
 
 
+def cohort_mesh(mesh: Mesh, n_clients: int) -> Mesh:
+    """The mesh one arch bucket should live on. Buckets with at least as
+    many clients as devices use the full client mesh; smaller buckets get
+    a submesh over the first ``n_clients`` devices, so a 2-client cohort
+    on an 8-device mesh is 2 real rows on 2 devices instead of 2 real +
+    6 ghost rows — arch buckets of different sizes coexist on the same
+    physical devices with independent layouts."""
+    n_dev = mesh.shape[CLIENT_AXIS]
+    if n_clients >= n_dev:
+        return mesh
+    devs = mesh.devices.reshape(-1)[:max(1, int(n_clients))]
+    return Mesh(devs, (CLIENT_AXIS,))
+
+
 def ghost_rows(n: int, n_dev: int) -> int:
     """Ghost rows needed to pad ``n`` clients to a multiple of ``n_dev``."""
     return (-n) % n_dev

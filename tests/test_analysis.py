@@ -341,6 +341,19 @@ def test_unregistered_registry_name_fires_and_known_names_clean():
     assert "no-such-policy" in v[0].message and v[0].where == "m.py:1"
 
 
+def test_family_registry_lint_covers_zoo():
+    """Typo'd model-family lookups die in the static gate, same as
+    policies/codecs — the zoo registry is part of the live set."""
+    regs = lint_rules._live_registries()
+    assert {"mlp-s", "resnet", "transformer", "ssm", "rglru"} \
+        <= regs["get_family"] == regs["as_family"]
+    src = ('a = get_family("mlp-xl")\n'
+           'b = as_family("transformer")\n')
+    v = lint_rules.find_unregistered_names(ast.parse(src), "m.py", regs)
+    assert len(v) == 1 and v[0].where == "m.py:1"
+    assert "mlp-xl" in v[0].message
+
+
 def test_parameterized_spec_suffix_checked():
     regs = lint_rules._live_registries()
     src = ('a = as_codec("topk:4")\n'              # clean: known + int
